@@ -1,0 +1,66 @@
+"""Distributed rank-k update scaling (8 virtual devices) + optimizer bench.
+
+Subprocess with forced device count so the main bench process keeps its
+single-device config.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+_CODE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, time
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import AxisType
+from repro.core import ref
+from repro.core.distributed import chol_update_sharded
+
+out = []
+n, k, panel = %(n)d, 16, 64
+rng = np.random.default_rng(0)
+B = rng.uniform(size=(n, n)).astype(np.float32)
+V = rng.uniform(size=(n, k)).astype(np.float32)
+A = B.T @ B + np.eye(n, dtype=np.float32)
+L = jnp.array(np.linalg.cholesky(A).T); Vj = jnp.array(V)
+for shape, axes in [((1,), ("model",)), ((4,), ("model",)), ((8,), ("model",))]:
+    mesh = jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,)*len(shape))
+    with mesh:
+        fn = lambda: chol_update_sharded(L, Vj, sigma=1, mesh=mesh, axis="model", panel=panel)
+        r = jax.block_until_ready(fn())
+        t0 = time.perf_counter()
+        for _ in range(3):
+            r = jax.block_until_ready(fn())
+        dt = (time.perf_counter() - t0) / 3
+    err = float(jnp.max(jnp.abs(r - ref.chol_update_ref(L, Vj, sigma=1))))
+    out.append({"devices": shape[0], "us": dt * 1e6, "err": err})
+print(json.dumps(out))
+"""
+
+
+def run(csv_rows, *, quick=False):
+    n = 512 if quick else 1024
+    repo = Path(__file__).resolve().parent.parent
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{repo / 'src'}:{env.get('PYTHONPATH', '')}"
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    res = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_CODE % {"n": n})],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    if res.returncode != 0:
+        csv_rows.append(("distributed/error", 0.0, res.stderr[-200:]))
+        return csv_rows
+    rows = json.loads(res.stdout.strip().splitlines()[-1])
+    base = rows[0]["us"]
+    for r in rows:
+        csv_rows.append(
+            (f"distributed/cholupdate/n{n}/dev{r['devices']}", r["us"],
+             f"err={r['err']:.2e} speedup_vs_1dev={base / r['us']:.2f}x")
+        )
+    return csv_rows

@@ -1,0 +1,55 @@
+"""Pallas kernel benches: interpret-mode correctness cost + VMEM accounting.
+
+Wall-clock in interpret mode is not TPU performance; what we report per
+kernel is (a) the paper error metric vs the oracle, (b) the BlockSpec VMEM
+working set (the quantity that must fit the 16 MiB v5e VMEM and determines
+the panel sizes used in the roofline), and (c) arithmetic intensity of the
+panel kernels — the paper's bandwidth-bound story vs the GEMM adaptation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import blocked, ref
+from repro.kernels import ops
+
+
+def vmem_bytes_paper(P, k, bw, dtype_bytes=4):
+    # L tile + V^T tile + (c, s) panels resident per grid step
+    return (P * bw + k * bw + 2 * P * k) * dtype_bytes
+
+
+def vmem_bytes_gemm(P, k, bw, dtype_bytes=4):
+    return ((P + k) * (P + k) + (P + k) * bw * 2) * dtype_bytes
+
+
+def run(csv_rows, *, quick=False):
+    import jax.numpy as jnp
+
+    n, k, panel, bw = (256, 8, 64, 64) if quick else (512, 16, 128, 128)
+    rng = np.random.default_rng(0)
+    B = rng.uniform(size=(n, n)).astype(np.float32)
+    V = rng.uniform(size=(n, k)).astype(np.float32)
+    A = B.T @ B + np.eye(n, dtype=np.float32)
+    L = jnp.asarray(np.linalg.cholesky(A).T)
+    Vj = jnp.asarray(V)
+    L_ref = ref.chol_update_ref(L, Vj, sigma=1)
+    for strat in ("paper", "gemm"):
+        out = ops.chol_update_pallas(L, Vj, sigma=1, panel=panel,
+                                     strategy=strat, block_w=bw, interpret=True)
+        err = float(np.max(np.abs(np.asarray(out - L_ref))))
+        csv_rows.append((f"pallas/{strat}/n{n}k{k}", 0.0,
+                         f"maxdiff_vs_oracle={err:.2e}"))
+    # VMEM working sets for the production tile choices (P=256, bw=512, k=16)
+    for P, kk, bw2 in [(256, 16, 512), (128, 16, 1024), (256, 1, 512)]:
+        vb_p = vmem_bytes_paper(P, kk, bw2)
+        vb_g = vmem_bytes_gemm(P, kk, bw2)
+        # arithmetic intensity: flops per HBM byte of the panel tile
+        ai_paper = (6.0 * kk * P * bw2) / (2 * (P + kk) * bw2 * 4)
+        ai_gemm = (2.0 * (P + kk) ** 2 * bw2) / (2 * (P + kk) * bw2 * 4)
+        csv_rows.append(
+            (f"pallas/vmem/P{P}k{kk}bw{bw2}", 0.0,
+             f"paper={vb_p/2**20:.2f}MiB gemm={vb_g/2**20:.2f}MiB "
+             f"AI_paper={ai_paper:.1f} AI_gemm={ai_gemm:.1f}flops/B")
+        )
+    return csv_rows

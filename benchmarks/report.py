@@ -1,0 +1,78 @@
+"""Render the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dryrun JSONL records.
+
+  PYTHONPATH=src python -m benchmarks.report
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def load(tag):
+    path = RESULTS / f"dryrun_{tag}.jsonl"
+    if not path.exists():
+        return []
+    return [json.loads(l) for l in path.open()]
+
+
+def fmt_bytes(b):
+    if b >= 2**30:
+        return f"{b / 2**30:.1f}G"
+    return f"{b / 2**20:.0f}M"
+
+
+def roofline_table(recs):
+    lines = [
+        "| arch | shape | kind | compute s | memory s | collective s | "
+        "bottleneck | MODEL/HLO | args/dev | temp/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                         f"ERROR | — | — | — |")
+            continue
+        ma = r.get("memory_analysis") or {}
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+            f"| {r['collective_s']:.3f} | {r['bottleneck']} "
+            f"| {r['useful_ratio']:.2f} "
+            f"| {fmt_bytes(ma.get('argument_bytes', 0))} "
+            f"| {fmt_bytes(ma.get('temp_bytes', 0))} |"
+        )
+    return "\n".join(lines)
+
+
+def dryrun_summary(recs, tag):
+    ok = [r for r in recs if "error" not in r]
+    colls = {}
+    for r in ok:
+        for k, v in (r.get("collectives") or {}).items():
+            colls[k] = colls.get(k, 0.0) + v
+    lines = [
+        f"**{tag}**: {len(ok)}/{len(recs)} cells lowered+compiled; "
+        f"mean compile {sum(r['compile_s'] for r in ok)/max(len(ok),1):.1f}s; "
+        f"collective mix (bytes/device summed over cells): "
+        + ", ".join(f"{k}={fmt_bytes(v)}" for k, v in sorted(colls.items())
+                    if k != "total"),
+    ]
+    return "\n".join(lines)
+
+
+def main():
+    for tag in ("singlepod", "multipod", "technique"):
+        recs = load(tag)
+        if not recs:
+            continue
+        print(f"\n### Mesh: {tag}\n")
+        print(dryrun_summary(recs, tag))
+        print()
+        print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Batched serving demo: SWA ring-cache decode (reduced h2o-danube config).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    tps = serve_main([
+        "--arch", "h2o-danube-1.8b",
+        "--batch", "8",
+        "--prompt-len", "32",
+        "--gen", "64",
+        "--temperature", "0.8",
+    ])
+    assert tps > 0

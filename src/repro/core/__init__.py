@@ -1,0 +1,33 @@
+"""The paper's primary contribution: rank-k Cholesky up/down-dating.
+
+``ref`` is the trusted serial oracle (paper Algorithm 1), ``blocked`` the
+panelled TPU-shaped implementation (paper §4 plus the GEMM adaptation),
+``distributed`` the shard_map multi-device version, ``solve`` the consumer
+utilities. ``api.chol_update`` is the public entry point.
+"""
+from repro.core.api import chol_downdate, chol_update
+from repro.core.blocked import chol_update_blocked
+from repro.core.ref import chol_update_dense, chol_update_ref, modify_error
+from repro.core.solve import (
+    chol_factor,
+    chol_logdet,
+    chol_solve,
+    downdate_feasible,
+    is_positive_factor,
+    solve_triangular,
+)
+
+__all__ = [
+    "chol_update",
+    "chol_downdate",
+    "chol_update_blocked",
+    "chol_update_ref",
+    "chol_update_dense",
+    "modify_error",
+    "chol_factor",
+    "chol_solve",
+    "chol_logdet",
+    "solve_triangular",
+    "downdate_feasible",
+    "is_positive_factor",
+]

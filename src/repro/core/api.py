@@ -1,0 +1,73 @@
+"""Public API for rank-k Cholesky up/down-dating.
+
+``chol_update`` is the single entry point the rest of the framework uses; the
+``method`` argument selects the execution path:
+
+* ``reference``   — serial oracle (O(k n^2), paper Algorithm 1).
+* ``paper``       — panelled, faithful element-wise panel apply (paper §4).
+* ``gemm``        — panelled, transform-matrix GEMM panel apply (TPU-native).
+* ``pallas``      — Pallas kernel, paper-style element-wise panel kernel.
+* ``pallas_gemm`` — Pallas kernel, MXU GEMM panel kernel.
+* ``auto``        — heuristic: reference for tiny n, gemm otherwise.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import blocked, ref
+
+_METHODS = ("reference", "paper", "gemm", "pallas", "pallas_gemm", "auto")
+
+
+def chol_update(
+    L,
+    V,
+    *,
+    sigma: int = 1,
+    method: str = "auto",
+    panel: int = 256,
+    interpret: Optional[bool] = None,
+):
+    """Rank-k up/down-date of the upper Cholesky factor L (A = L^T L).
+
+    Args:
+      L: (n, n) upper-triangular factor with positive diagonal.
+      V: (n, k) or (n,) modification matrix.
+      sigma: +1 for update (A + V V^T), -1 for downdate (A - V V^T).
+      method: execution path, see module docstring.
+      panel: row-panel size for the blocked paths.
+      interpret: force Pallas interpret mode (defaults to auto-detect: True on
+        CPU, False on TPU).
+
+    Returns:
+      The modified upper-triangular factor.
+    """
+    if method not in _METHODS:
+        raise ValueError(f"method must be one of {_METHODS}, got {method!r}")
+    n = L.shape[0]
+    if method == "auto":
+        method = "reference" if n < 2 * panel else "gemm"
+    if method == "reference":
+        return ref.chol_update_ref(L, V, sigma=sigma)
+    if method in ("paper", "gemm"):
+        return blocked.chol_update_blocked(
+            L, V, sigma=sigma, panel=panel, strategy=method
+        )
+    # Pallas paths imported lazily so the pure-JAX core has no kernel deps.
+    from repro.kernels import ops as kernel_ops
+
+    return kernel_ops.chol_update_pallas(
+        L,
+        V,
+        sigma=sigma,
+        panel=panel,
+        strategy="gemm" if method == "pallas_gemm" else "paper",
+        interpret=interpret,
+    )
+
+
+def chol_downdate(L, V, **kw):
+    """Convenience wrapper for ``chol_update(..., sigma=-1)``."""
+    return chol_update(L, V, sigma=-1, **kw)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, SyntheticTokens, frontend_stub_embeds
+
+__all__ = ["DataConfig", "SyntheticTokens", "frontend_stub_embeds"]

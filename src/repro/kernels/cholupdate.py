@@ -1,0 +1,236 @@
+"""Pallas TPU kernels for the rank-k Cholesky panel update (paper §4.4).
+
+Three kernels, mirroring the paper's CUDA kernels but re-tiled for the TPU
+memory hierarchy (HBM -> VMEM -> VREG) per DESIGN.md §2:
+
+* ``panel_apply_paper``  — faithful port of the paper's off-diagonal kernel:
+  one VMEM column-tile per grid step (the CUDA block), rows streamed
+  sequentially (the dotted sub-squares), the k rotations chained per element
+  (``ElementsPerThread``). The (c, s) panel plays the role of the shared-
+  memory staging buffer; the V tile stays resident in VMEM across the row
+  loop like the paper keeps V in registers. Bandwidth-bound by construction.
+
+* ``panel_apply_gemm``   — TPU-native adaptation: the P·k rotations of a
+  panel are one linear map T ∈ R^{(P+k)×(P+k)}, so the panel update is a
+  dense ``T @ [R; V^T]`` on the MXU (arithmetic intensity ~(P+k)/2 instead
+  of ~k). The faithful kernel remains the paper baseline; this one is the
+  beyond-paper optimization measured in EXPERIMENTS.md §Perf.
+
+* ``diag_block``         — the paper's *CPU phase* moved on-device: the
+  serial hyperbolic recurrence over one diagonal block, augmented with an
+  identity to emit the transform T. Single grid step, scalar-unit heavy;
+  removes the host round-trip the paper pays between panels.
+
+All kernels are validated in ``interpret=True`` mode against the pure-jnp
+oracles in ``repro.core.blocked`` (see tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------------
+# Faithful element-wise panel kernel (the paper's GPU kernel).
+# ---------------------------------------------------------------------------
+
+
+def _paper_kernel(c_ref, s_ref, r_ref, vt_ref, r_out, vt_out, *, sigma: int, rows: int, k: int):
+    # Load the V tile once (paper step 1: V into registers) and keep it live
+    # across the whole row loop; write it back at the end (paper step 3).
+    vt = vt_ref[...]  # (k, bw)
+    c = c_ref[...]    # (rows, k) — the shared-memory (c, s) staging buffer
+    s = s_ref[...]
+
+    def row_body(i, vt):
+        t = r_ref[pl.dslice(i, 1), :]  # (1, bw): read one L row
+
+        def m_body(m, carry):
+            t, vt = carry
+            c_im = jax.lax.dynamic_slice(c, (i, m), (1, 1))
+            s_im = jax.lax.dynamic_slice(s, (i, m), (1, 1))
+            v_m = jax.lax.dynamic_slice_in_dim(vt, m, 1, axis=0)  # (1, bw)
+            t = (t + sigma * s_im * v_m) / c_im       # paper Apply, line 1
+            v_m = c_im * v_m - s_im * t               # paper Apply, line 2
+            vt = jax.lax.dynamic_update_slice_in_dim(vt, v_m, m, axis=0)
+            return t, vt
+
+        t, vt = jax.lax.fori_loop(0, k, m_body, (t, vt))
+        r_out[pl.dslice(i, 1), :] = t  # write the L row back
+        return vt
+
+    vt = jax.lax.fori_loop(0, rows, row_body, vt)
+    vt_out[...] = vt
+
+
+@functools.partial(
+    jax.jit, static_argnames=("sigma", "block_w", "interpret")
+)
+def panel_apply_paper(R, vt, c, s, *, sigma: int, block_w: int = 512, interpret: bool = False):
+    """Off-diagonal panel apply, paper-style. R: (P, w); vt: (k, w); c,s: (P, k)."""
+    P, w = R.shape
+    k = vt.shape[0]
+    pad_w = (-w) % block_w
+    if pad_w:
+        # Zero columns are fixed points of Apply (t = (0 + s·0)/c = 0).
+        R = jnp.pad(R, ((0, 0), (0, pad_w)))
+        vt = jnp.pad(vt, ((0, 0), (0, pad_w)))
+    wp = R.shape[1]
+    grid = (wp // block_w,)
+    kernel = functools.partial(_paper_kernel, sigma=sigma, rows=P, k=k)
+    R_new, vt_new = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((P, k), lambda j: (0, 0)),        # c: resident
+            pl.BlockSpec((P, k), lambda j: (0, 0)),        # s: resident
+            pl.BlockSpec((P, block_w), lambda j: (0, j)),  # L panel tile
+            pl.BlockSpec((k, block_w), lambda j: (0, j)),  # V^T tile
+        ],
+        out_specs=[
+            pl.BlockSpec((P, block_w), lambda j: (0, j)),
+            pl.BlockSpec((k, block_w), lambda j: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((P, wp), R.dtype),
+            jax.ShapeDtypeStruct((k, wp), vt.dtype),
+        ],
+        interpret=interpret,
+    )(c, s, R, vt)
+    return R_new[:, :w], vt_new[:, :w]
+
+
+# ---------------------------------------------------------------------------
+# GEMM panel kernel (TPU-native adaptation).
+# ---------------------------------------------------------------------------
+
+
+def _gemm_kernel(t_ref, r_ref, vt_ref, r_out, vt_out, *, rows: int):
+    T = t_ref[...]          # (P+k, P+k), fully VMEM-resident
+    R = r_ref[...]          # (P, bw)
+    vt = vt_ref[...]        # (k, bw)
+    t_rr = T[:rows, :rows]
+    t_rv = T[:rows, rows:]
+    t_vr = T[rows:, :rows]
+    t_vv = T[rows:, rows:]
+    # Two MXU matmuls per output block; fp32 accumulation.
+    acc = jnp.dot(t_rr, R, preferred_element_type=jnp.float32)
+    acc += jnp.dot(t_rv, vt, preferred_element_type=jnp.float32)
+    r_out[...] = acc.astype(r_out.dtype)
+    accv = jnp.dot(t_vr, R, preferred_element_type=jnp.float32)
+    accv += jnp.dot(t_vv, vt, preferred_element_type=jnp.float32)
+    vt_out[...] = accv.astype(vt_out.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
+def panel_apply_gemm(R, vt, T, *, block_w: int = 512, interpret: bool = False):
+    """Off-diagonal panel apply as one transform GEMM. T: (P+k, P+k)."""
+    P, w = R.shape
+    k = vt.shape[0]
+    pad_w = (-w) % block_w
+    if pad_w:
+        R = jnp.pad(R, ((0, 0), (0, pad_w)))
+        vt = jnp.pad(vt, ((0, 0), (0, pad_w)))
+    wp = R.shape[1]
+    grid = (wp // block_w,)
+    pk = P + k
+    kernel = functools.partial(_gemm_kernel, rows=P)
+    R_new, vt_new = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((pk, pk), lambda j: (0, 0)),      # T: resident
+            pl.BlockSpec((P, block_w), lambda j: (0, j)),
+            pl.BlockSpec((k, block_w), lambda j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((P, block_w), lambda j: (0, j)),
+            pl.BlockSpec((k, block_w), lambda j: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((P, wp), R.dtype),
+            jax.ShapeDtypeStruct((k, wp), vt.dtype),
+        ],
+        interpret=interpret,
+    )(T, R, vt)
+    return R_new[:, :w], vt_new[:, :w]
+
+
+# ---------------------------------------------------------------------------
+# On-device diagonal-block kernel (the paper's CPU phase, without the host).
+# ---------------------------------------------------------------------------
+
+
+def _diag_kernel(d_ref, vtd_ref, d_out, c_out, s_out, t_out, *, sigma: int, rows: int, k: int):
+    pk = rows + k
+    # Stacked working set: [D; vt_diag | I_{P+k}] — (P+k, P + P+k), in VMEM.
+    S = jnp.concatenate([d_ref[...], vtd_ref[...]], axis=0)
+    S = jnp.concatenate([S, jnp.eye(pk, dtype=S.dtype)], axis=1)
+
+    def row_body(i, carry):
+        S, c_acc, s_acc = carry
+
+        def m_body(m, inner):
+            S, c_acc, s_acc = inner
+            row_i = jax.lax.dynamic_slice_in_dim(S, i, 1, axis=0)
+            row_v = jax.lax.dynamic_slice_in_dim(S, rows + m, 1, axis=0)
+            lii = jax.lax.dynamic_slice_in_dim(row_i, i, 1, axis=1)[0, 0]
+            vim = jax.lax.dynamic_slice_in_dim(row_v, i, 1, axis=1)[0, 0]
+            w = jnp.sqrt(lii * lii + sigma * vim * vim)
+            c = w / lii
+            s = vim / lii
+            row_i_new = (row_i + sigma * s * row_v) / c
+            row_v_new = c * row_v - s * row_i_new
+            S = jax.lax.dynamic_update_slice_in_dim(S, row_i_new, i, axis=0)
+            S = jax.lax.dynamic_update_slice_in_dim(S, row_v_new, rows + m, axis=0)
+            c_acc = jax.lax.dynamic_update_slice(c_acc, c[None, None], (i, m))
+            s_acc = jax.lax.dynamic_update_slice(s_acc, s[None, None], (i, m))
+            return S, c_acc, s_acc
+
+        return jax.lax.fori_loop(0, k, m_body, carry)
+
+    c0 = jnp.zeros((rows, k), dtype=S.dtype)
+    s0 = jnp.zeros((rows, k), dtype=S.dtype)
+    S, c_acc, s_acc = jax.lax.fori_loop(0, rows, row_body, (S, c0, s0))
+    d_out[...] = jnp.triu(S[:rows, :rows])
+    c_out[...] = c_acc
+    s_out[...] = s_acc
+    t_out[...] = S[:, rows:]
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "interpret"))
+def diag_block(D, vtd, *, sigma: int, interpret: bool = False):
+    """Serial diagonal-block pass on-device. D: (P, P); vtd: (k, P).
+
+    Returns (D_new, c, s, T) exactly like ``repro.core.blocked.panel_diag``
+    with ``with_transform=True``.
+    """
+    P = D.shape[0]
+    k = vtd.shape[0]
+    pk = P + k
+    kernel = functools.partial(_diag_kernel, sigma=sigma, rows=P, k=k)
+    D_new, c, s, T = pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((P, P), lambda j: (0, 0)),
+            pl.BlockSpec((k, P), lambda j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((P, P), lambda j: (0, 0)),
+            pl.BlockSpec((P, k), lambda j: (0, 0)),
+            pl.BlockSpec((P, k), lambda j: (0, 0)),
+            pl.BlockSpec((pk, pk), lambda j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((P, P), D.dtype),
+            jax.ShapeDtypeStruct((P, k), D.dtype),
+            jax.ShapeDtypeStruct((P, k), D.dtype),
+            jax.ShapeDtypeStruct((pk, pk), D.dtype),
+        ],
+        interpret=interpret,
+    )(D, vtd)
+    return D_new, c, s, T

@@ -1,0 +1,63 @@
+"""Jit'd wrappers wiring the Pallas panel kernels into the blocked driver."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blocked
+from repro.kernels import cholupdate as _k
+
+
+def _default_interpret() -> bool:
+    # Interpret mode everywhere except a real TPU backend.
+    return jax.default_backend() != "tpu"
+
+
+def chol_update_pallas(
+    L,
+    V,
+    *,
+    sigma: int = 1,
+    panel: int = 256,
+    strategy: str = "paper",
+    block_w: int = 512,
+    interpret: Optional[bool] = None,
+):
+    """Panelled rank-k up/down-date with Pallas panel kernels.
+
+    ``strategy='paper'`` uses the faithful element-wise kernel,
+    ``strategy='gemm'`` the transform-GEMM kernel. The panel orchestration
+    (diagonal pass -> panel kernel -> next panel) reuses the blocked driver.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+
+    if strategy == "paper":
+
+        def apply_fn(R, vt, c, s, T, sig):
+            return _k.panel_apply_paper(
+                R, vt, c, s, sigma=sig, block_w=block_w, interpret=interpret
+            )
+
+    elif strategy == "gemm":
+
+        def apply_fn(R, vt, c, s, T, sig):
+            return _k.panel_apply_gemm(
+                R, vt, T, block_w=block_w, interpret=interpret
+            )
+
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+
+    return blocked.chol_update_blocked(
+        L, V, sigma=sigma, panel=panel, strategy="gemm", apply_fn=apply_fn
+    )
+
+
+def diag_block_pallas(D, vtd, *, sigma: int = 1, interpret: Optional[bool] = None):
+    """On-device serial diagonal-block pass (paper CPU phase)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _k.diag_block(D, vtd, sigma=sigma, interpret=interpret)

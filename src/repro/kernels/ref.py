@@ -1,0 +1,11 @@
+"""Pure-jnp oracles for the Pallas kernels (re-exports from core.blocked).
+
+Kernel tests compare each Pallas kernel in interpret mode against these:
+
+* ``panel_apply_paper(R, vt, c, s, sigma)``  <-> kernels.cholupdate.panel_apply_paper
+* ``panel_apply_gemm(R, vt, T)``             <-> kernels.cholupdate.panel_apply_gemm
+* ``panel_diag(D, vtd, sigma, with_transform=True)`` <-> kernels.cholupdate.diag_block
+"""
+from repro.core.blocked import panel_apply_gemm, panel_apply_paper, panel_diag
+
+__all__ = ["panel_apply_paper", "panel_apply_gemm", "panel_diag"]

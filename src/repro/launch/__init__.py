@@ -1,0 +1,5 @@
+# NOTE: repro.launch.dryrun intentionally NOT imported here — it sets
+# XLA_FLAGS at import time and must only be imported as the main module.
+from repro.launch import mesh, steps
+
+__all__ = ["mesh", "steps"]

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a *function* (never a module-level constant) so
+importing this module never touches jax device state. The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import to build these meshes on the CPU container; on real hardware the same
+shapes map onto TPU v5e pods (256 chips/pod).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Optional[Tuple[str, ...]] = None):
+    """Arbitrary mesh (elastic restarts re-mesh through this)."""
+    if axes is None:
+        axes = ("pod", "data", "model")[-len(shape):]
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def single_device_mesh():
+    return make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,195 @@
+"""Jittable train / prefill / serve steps + per-cell input specs.
+
+These are the functions the dry-run lowers for every (arch x shape x mesh)
+cell and the train/serve drivers execute for real. Sharding enters only
+through in/out_shardings built from sharding/rules.py — the step bodies are
+pure global-view JAX.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+import repro.optim as optim
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import decode_step, init_cache, init_model, loss_fn, split_params
+from repro.models import layers as Lyr
+from repro.sharding import rules
+
+
+# ---------------------------------------------------------------------------
+# Step bodies.
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(cfg: ModelConfig, opt: optim.Optimizer, *, clip_norm=1.0,
+                    grad_accum: int = 1):
+    """One optimizer step; ``grad_accum`` microbatches the global batch
+    (activation memory / accum at the cost of an fp32 grad accumulator)."""
+
+    def grads_of(values, batch):
+        return jax.value_and_grad(
+            lambda v: loss_fn(v, cfg, batch), has_aux=True
+        )(values)
+
+    def train_step(values, opt_state, batch):
+        if grad_accum == 1:
+            (total, metrics), grads = grads_of(values, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape(
+                    grad_accum, x.shape[0] // grad_accum, *x.shape[1:]
+                ),
+                batch,
+            )
+
+            def micro(carry, mbi):
+                gsum, tsum = carry
+                (t, met), g = grads_of(values, mbi)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g
+                )
+                return (gsum, tsum + t), met
+
+            g0 = jax.tree.map(
+                lambda v: jnp.zeros(v.shape, jnp.float32), values
+            )
+            (gsum, tsum), mets = jax.lax.scan(
+                micro, (g0, jnp.zeros((), jnp.float32)), mb
+            )
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+            total = tsum / grad_accum
+            metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), mets)
+        grads, gnorm = optim.clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = opt.update(grads, opt_state, values)
+        values = optim.apply_updates(values, updates)
+        metrics = dict(metrics, grad_norm=gnorm, loss_total=total)
+        return values, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(values, cache, tokens):
+        return decode_step(values, cfg, cache, tokens)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """Forward over the full prompt emitting (last-token logits, aux)."""
+
+    def prefill_step(values, batch):
+        from repro.models.model import forward
+
+        logits = forward(values, cfg, batch)
+        return logits[:, -1]
+
+    return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# Shape specs per cell (ShapeDtypeStruct stand-ins; no allocation).
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell, *, cache_dtype=jnp.bfloat16):
+    """Stand-ins for every model input of the cell (weak-type-correct,
+    shardable, no device allocation)."""
+    B, S = cell.global_batch, cell.seq_len
+    if cell.kind in ("train", "prefill"):
+        specs = {"tokens": _sds((B, S), jnp.int32)}
+        if cell.kind == "train":
+            specs["labels"] = _sds((B, S), jnp.int32)
+        if cfg.family == "vlm":
+            P = int(S * cfg.frontend_frac)
+            specs["embeds"] = _sds((B, P, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "encdec":
+            specs["src_embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+        return specs
+    if cell.kind == "decode":
+        cache = jax.eval_shape(
+            lambda: init_cache(cfg, B, S, cache_dtype)
+        )
+        return {"tokens": _sds((B,), jnp.int32), "cache": cache}
+    raise ValueError(cell.kind)
+
+
+def param_shapes_and_axes(cfg: ModelConfig, key=None):
+    """(values ShapeDtypeStruct tree, logical axes tree) without allocation.
+
+    Shapes come from eval_shape on the full config; axes from a real init of
+    the reduced config (identical tree structure, checked)."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    values_shapes = jax.eval_shape(
+        lambda k: split_params(init_model(k, cfg))[0], key
+    )
+    _, axes = split_params(init_model(key, cfg.reduced()))
+    s1 = jax.tree.structure(jax.tree.map(lambda x: 0, values_shapes))
+    s2 = jax.tree.structure(
+        jax.tree.map(lambda a: 0, axes, is_leaf=lambda x: isinstance(x, tuple))
+    )
+    assert s1 == s2, f"axes tree mismatch: {s1} vs {s2}"
+    return values_shapes, axes
+
+
+def opt_state_specs(opt_state_shapes, param_specs_tree, mesh):
+    """Shardings for optimizer state: m/v/factors mirror params when the
+    subtree structure matches; scalars and everything else replicate."""
+    from jax.sharding import PartitionSpec as P
+
+    def mirror(sub):
+        try:
+            same = jax.tree.structure(
+                jax.tree.map(lambda x: 0, sub)
+            ) == jax.tree.structure(
+                jax.tree.map(lambda x: 0, param_specs_tree,
+                             is_leaf=lambda x: isinstance(x, P))
+            )
+        except Exception:
+            same = False
+        return same
+
+    out = {}
+    for k, sub in opt_state_shapes.items():
+        if k in ("m", "v") and mirror(sub):
+            out[k] = param_specs_tree
+        else:
+            out[k] = jax.tree.map(lambda x: P(), sub)
+    return out
+
+
+def batch_specs(specs_tree, mesh, *, policy: str = "tp"):
+    """Batch-dim sharding over the data axes (replicate when indivisible).
+    Under policy='dp' the model axis joins the data axes; if the batch does
+    not divide the combined size, the largest divisible prefix is used."""
+    from jax.sharding import PartitionSpec as P
+
+    dp = rules.data_axes(mesh)
+    if policy == "dp":
+        dp = dp + rules.model_axes(mesh)
+
+    def spec(x):
+        if x.ndim == 0:
+            return P()
+        axes = list(dp)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        while axes and x.shape[0] % size:
+            a = axes.pop()  # drop innermost axis until divisible
+            size //= mesh.shape[a]
+        if not axes:
+            return P()
+        name = tuple(axes) if len(axes) > 1 else axes[0]
+        return P(*([name] + [None] * (x.ndim - 1)))
+
+    return jax.tree.map(spec, specs_tree)

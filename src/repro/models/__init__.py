@@ -1,0 +1,19 @@
+from repro.models.model import (
+    decode_step,
+    forward,
+    init_cache,
+    init_model,
+    loss_fn,
+    param_count,
+    split_params,
+)
+
+__all__ = [
+    "init_model",
+    "split_params",
+    "loss_fn",
+    "forward",
+    "init_cache",
+    "decode_step",
+    "param_count",
+]

@@ -1,0 +1,208 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The multimodal frontend is a stub per the assignment: ``input_specs()``
+supplies pre-computed (B, S_src, D) frame embeddings to the encoder. The
+decoder is a standard causal stack with cross-attention into the encoder
+output; decode caches both the decoder self-attention KV and the (static)
+cross-attention KV computed once at prefill.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+
+
+def _gated(cfg):
+    return cfg.activation in ("swiglu", "geglu")
+
+
+def _enc_layer_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.norm_init(cfg.norm, cfg.d_model, dtype),
+        "attn": A.attention_init(k1, cfg.attn, cfg.d_model, dtype),
+        "ln2": L.norm_init(cfg.norm, cfg.d_model, dtype),
+        "mlp": L.mlp_init(k2, cfg.d_model, cfg.d_ff, dtype,
+                          activation=cfg.activation, gated=_gated(cfg)),
+    }
+
+
+def _dec_layer_init(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": L.norm_init(cfg.norm, cfg.d_model, dtype),
+        "self_attn": A.attention_init(k1, cfg.attn, cfg.d_model, dtype),
+        "ln_x": L.norm_init(cfg.norm, cfg.d_model, dtype),
+        "cross_attn": A.attention_init(k2, cfg.attn, cfg.d_model, dtype),
+        "ln2": L.norm_init(cfg.norm, cfg.d_model, dtype),
+        "mlp": L.mlp_init(k3, cfg.d_model, cfg.d_ff, dtype,
+                          activation=cfg.activation, gated=_gated(cfg)),
+    }
+
+
+def init_encdec(key, cfg):
+    from repro.models.transformer import _stack
+
+    dtype = jnp.dtype(cfg.param_dtype)
+    ke, kl1, kl2, kh = jax.random.split(key, 4)
+    enc_keys = jax.random.split(kl1, cfg.enc_layers)
+    dec_keys = jax.random.split(kl2, cfg.num_layers)
+    params = {
+        "embed": L.embed_init(ke, cfg.vocab_padded, cfg.d_model, dtype),
+        "enc_layers": _stack([_enc_layer_init(k, cfg, dtype) for k in enc_keys]),
+        "enc_norm": L.norm_init(cfg.norm, cfg.d_model, dtype),
+        "dec_layers": _stack([_dec_layer_init(k, cfg, dtype) for k in dec_keys]),
+        "final_norm": L.norm_init(cfg.norm, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "w": L.param(kh, (cfg.d_model, cfg.vocab_padded), ("embed", "vocab"),
+                         dtype=dtype)
+        }
+    return params
+
+
+def encode(values, cfg, src_embeds):
+    """src_embeds: (B, Ss, D) frontend-stub frame embeddings."""
+    B, Ss, _ = src_embeds.shape
+    x = src_embeds.astype(jnp.dtype(cfg.param_dtype))
+    positions = jnp.broadcast_to(jnp.arange(Ss)[None], (B, Ss))
+
+    def body(x, lp):
+        h = L.apply_norm(cfg.norm, lp["ln1"], x)
+        x = x + A.attn_block(lp["attn"], h, positions, cfg.attn, causal=False)
+        h = L.apply_norm(cfg.norm, lp["ln2"], x)
+        x = x + L.mlp(lp["mlp"], h, activation=cfg.activation)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(
+        body, x, values["enc_layers"],
+        unroll=1 if cfg.scan_layers else cfg.enc_layers,
+    )
+    return L.apply_norm(cfg.norm, values["enc_norm"], x)
+
+
+def decode_hidden(values, cfg, enc_out, tgt_tokens):
+    """Decoder stack up to (but not including) the vocab projection."""
+    return decode_train(values, cfg, enc_out, tgt_tokens, return_hidden=True)
+
+
+def decode_train(values, cfg, enc_out, tgt_tokens, *, collect_cache=False,
+                 return_hidden=False):
+    B, St = tgt_tokens.shape
+    Ss = enc_out.shape[1]
+    x = L.embed_lookup(values["embed"], tgt_tokens)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(St)[None], (B, St))
+    kv_positions = jnp.broadcast_to(jnp.arange(Ss)[None], (B, Ss))
+
+    def body(x, lp):
+        h = L.apply_norm(cfg.norm, lp["ln1"], x)
+        q, k, v = A.qkv(lp["self_attn"], h, positions, cfg.attn)
+        o = A.flash_attention(q, k, v, causal=True)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, lp["self_attn"]["wo"])
+        h = L.apply_norm(cfg.norm, lp["ln_x"], x)
+        x = x + A.cross_attn_block(lp["cross_attn"], h, positions, enc_out,
+                                   kv_positions, cfg.attn)
+        h = L.apply_norm(cfg.norm, lp["ln2"], x)
+        x = x + L.mlp(lp["mlp"], h, activation=cfg.activation)
+        if collect_cache:
+            ck = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_attn"]["wk"])
+            ck = L.rope(ck, kv_positions, theta=cfg.attn.rope_theta)
+            cv = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_attn"]["wv"])
+            return x, (k, v, ck, cv)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, caches = jax.lax.scan(
+        body, x, values["dec_layers"],
+        unroll=1 if cfg.scan_layers else cfg.num_layers,
+    )
+    x = L.apply_norm(cfg.norm, values["final_norm"], x)
+    if return_hidden:
+        return x
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, values["embed"]["tokens"])
+    else:
+        logits = x @ values["lm_head"]["w"]
+    if collect_cache:
+        return logits.astype(jnp.float32), caches
+    return logits.astype(jnp.float32)
+
+
+def encdec_loss(values, cfg, src_embeds, tgt_tokens, labels):
+    from repro.models.transformer import chunked_xent
+
+    enc_out = encode(values, cfg, src_embeds)
+    x = decode_hidden(values, cfg, enc_out, tgt_tokens)
+    loss = chunked_xent(values, cfg, x, labels)
+    return loss, {"loss": loss}
+
+
+def init_encdec_cache(cfg, batch, slots, src_len, dtype=jnp.bfloat16):
+    Lc = cfg.num_layers
+    kvs = (Lc, batch, slots, cfg.attn.num_kv_heads, cfg.attn.head_dim)
+    xkv = (Lc, batch, src_len, cfg.attn.num_kv_heads, cfg.attn.head_dim)
+    return {
+        "pos": jnp.zeros((), jnp.int32),
+        "k": jnp.zeros(kvs, dtype),
+        "v": jnp.zeros(kvs, dtype),
+        "xk": jnp.zeros(xkv, dtype),
+        "xv": jnp.zeros(xkv, dtype),
+    }
+
+
+def encdec_decode_step(values, cfg, cache, tokens):
+    """One decoder step against self-KV + precomputed cross-KV caches."""
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    x = L.embed_lookup(values["embed"], tokens)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+    slots = cache["k"].shape[2]
+    write_at = jnp.minimum(pos, slots - 1)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.attn.head_dim, jnp.float32))
+    KV, G = cfg.attn.num_kv_heads, cfg.attn.num_heads // cfg.attn.num_kv_heads
+
+    def body(x, xs):
+        lp, ck, cv, xk, xv = xs
+        h = L.apply_norm(cfg.norm, lp["ln1"], x)
+        o, k1, v1 = A.decode_attn(lp["self_attn"], h, ck, cv, pos, cfg.attn)
+        x = x + o
+        # Cross-attention against the full precomputed encoder KV.
+        h = L.apply_norm(cfg.norm, lp["ln_x"], x)
+        q = jnp.einsum("bd,dhk->bhk", h, lp["cross_attn"]["wq"])
+        q = L.rope(q[:, None], jnp.full((B, 1), pos), theta=cfg.attn.rope_theta)[:, 0]
+        qg = q.reshape(B, KV, G, cfg.attn.head_dim)
+        s = jnp.einsum("bkgd,bskd->bkgs", qg, xk,
+                       preferred_element_type=jnp.float32) * scale
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgs,bskd->bkgd", w.astype(xv.dtype), xv)
+        o = o.reshape(B, cfg.attn.num_heads, cfg.attn.head_dim)
+        x = x + jnp.einsum("bhk,hkd->bd", o, lp["cross_attn"]["wo"])
+        h = L.apply_norm(cfg.norm, lp["ln2"], x)
+        x = x + L.mlp(lp["mlp"], h, activation=cfg.activation)
+        ck = jax.lax.dynamic_update_index_in_dim(ck, k1.astype(ck.dtype), write_at, axis=1)
+        cv = jax.lax.dynamic_update_index_in_dim(cv, v1.astype(cv.dtype), write_at, axis=1)
+        return x, (ck, cv)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (values["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"])
+    )
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = k_new, v_new
+    new_cache["pos"] = pos + 1
+    x = L.apply_norm(cfg.norm, values["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bd,vd->bv", x, values["embed"]["tokens"])
+    else:
+        logits = x @ values["lm_head"]["w"]
+    return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,164 @@
+"""Parameter substrate + elementary layers (no flax: functional init/apply).
+
+Every parameter is created through ``param(...)`` which records a tuple of
+*logical axis names* alongside the array. ``split(tree)`` separates values
+from axes; ``sharding/rules.py`` lowers axes to ``PartitionSpec``s.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class Param:
+    value: jnp.ndarray
+    axes: Tuple[Optional[str], ...]
+
+
+def param(key, shape, axes, *, dtype, scale: Optional[float] = None, init="normal"):
+    if len(axes) != len(shape):
+        raise ValueError(f"axes {axes} vs shape {shape}")
+    if init == "zeros":
+        v = jnp.zeros(shape, dtype)
+    elif init == "ones":
+        v = jnp.ones(shape, dtype)
+    else:
+        if scale is None:
+            scale = 1.0 / jnp.sqrt(shape[0] if len(shape) > 1 else shape[-1])
+        v = (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+    return Param(v, tuple(axes))
+
+
+def split(tree):
+    """Param tree -> (values tree, axes tree)."""
+    is_p = lambda x: isinstance(x, Param)
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_p)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_p)
+    return values, axes
+
+
+# ---------------------------------------------------------------------------
+# Norms (fp32 internals regardless of activation dtype).
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d, dtype):
+    return {"scale": Param(jnp.ones((d,), dtype), ("embed",))}
+
+
+def rmsnorm(p, x, *, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm_init(d, dtype):
+    return {
+        "scale": Param(jnp.ones((d,), dtype), ("embed",)),
+        "bias": Param(jnp.zeros((d,), dtype), ("embed",)),
+    }
+
+
+def layernorm(p, x, *, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def norm_init(kind, d, dtype):
+    return rmsnorm_init(d, dtype) if kind == "rmsnorm" else layernorm_init(d, dtype)
+
+
+def apply_norm(kind, p, x):
+    return rmsnorm(p, x) if kind == "rmsnorm" else layernorm(p, x)
+
+
+# ---------------------------------------------------------------------------
+# Linear / embedding.
+# ---------------------------------------------------------------------------
+
+
+def linear_init(key, d_in, d_out, axes, dtype, *, scale=None):
+    return {"w": param(key, (d_in, d_out), axes, dtype=dtype, scale=scale)}
+
+
+def linear(p, x):
+    return x @ p["w"]
+
+
+def embed_init(key, vocab, d, dtype):
+    return {
+        "tokens": param(key, (vocab, d), ("vocab", "embed"), dtype=dtype, scale=1.0)
+    }
+
+
+def embed_lookup(p, tokens):
+    return jnp.take(p["tokens"], tokens, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Activations / gated MLP.
+# ---------------------------------------------------------------------------
+
+
+def _act(name, x):
+    if name in ("swiglu", "silu"):
+        return jax.nn.silu(x)
+    if name in ("geglu", "gelu"):
+        return jax.nn.gelu(x)
+    raise ValueError(name)
+
+
+def mlp_init(key, d, d_ff, dtype, *, activation="swiglu", gated=True):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "wi": param(k1, (d, d_ff), ("embed", "mlp"), dtype=dtype),
+        "wo": param(k3, (d_ff, d), ("mlp", "embed"), dtype=dtype),
+    }
+    if gated:
+        p["wg"] = param(k2, (d, d_ff), ("embed", "mlp"), dtype=dtype)
+    return p
+
+
+def mlp(p, x, *, activation="swiglu"):
+    if "wg" in p:
+        h = _act(activation, x @ p["wg"]) * (x @ p["wi"])
+    else:
+        h = _act(activation, x @ p["wi"])
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding.
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, *, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap

@@ -1,0 +1,60 @@
+"""Family dispatch facade: one API over decoder-only and encoder-decoder."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec as ED
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+def init_model(key, cfg):
+    """Param tree (Param leaves with logical axes)."""
+    if cfg.family == "encdec":
+        return ED.init_encdec(key, cfg)
+    return T.init_lm(key, cfg)
+
+
+def split_params(params):
+    """-> (values tree, logical-axes tree)."""
+    return L.split(params)
+
+
+def loss_fn(values, cfg, batch):
+    """batch: dict with 'tokens'/'labels' (+ 'embeds' or 'src_embeds')."""
+    if cfg.family == "encdec":
+        return ED.encdec_loss(
+            values, cfg, batch["src_embeds"], batch["tokens"], batch["labels"]
+        )
+    return T.lm_loss(
+        values, cfg, batch["tokens"], batch["labels"], embeds=batch.get("embeds")
+    )
+
+
+def forward(values, cfg, batch):
+    if cfg.family == "encdec":
+        enc = ED.encode(values, cfg, batch["src_embeds"])
+        return ED.decode_train(values, cfg, enc, batch["tokens"])
+    logits, _ = T.forward_lm(
+        values, cfg, batch["tokens"], embeds=batch.get("embeds")
+    )
+    return logits
+
+
+def init_cache(cfg, batch_size, seq_len, dtype=jnp.bfloat16):
+    if cfg.family == "encdec":
+        return ED.init_encdec_cache(cfg, batch_size, seq_len, seq_len, dtype)
+    spec = T.cache_spec(cfg, batch_size, seq_len)
+    return T.init_cache(cfg, spec, dtype)
+
+
+def decode_step(values, cfg, cache, tokens):
+    if cfg.family == "encdec":
+        return ED.encdec_decode_step(values, cfg, cache, tokens)
+    return T.decode_step(values, cfg, cache, tokens)
+
+
+def param_count(params):
+    values, _ = L.split(params)
+    return sum(int(v.size) for v in jax.tree.leaves(values))

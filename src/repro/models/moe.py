@@ -1,0 +1,96 @@
+"""Mixture-of-Experts FFN: top-k routing, scatter/gather dispatch, EP-shardable.
+
+Dispatch layout: every (token, choice) is assigned a slot in a capacity-
+padded expert-input buffer of shape (E*C + 1, D) (the extra row absorbs
+dropped tokens). Dispatch is a scatter-add, combine a gather — O(T k D)
+bytes and *zero* extra FLOPs, unlike the dense GShard (T, E, C) one-hot
+einsum whose dispatch FLOPs rival the expert GEMMs at 1M-token batches.
+Expert weights carry the ``experts`` logical axis (EP over the TP axis when
+divisible; expert_mlp sharding otherwise — see sharding/rules.py), and the
+expert-input buffer is the EP all-to-all boundary on a real mesh.
+
+Supports the arctic-480b wrinkle: a *dense residual* FFN in parallel with
+the routed experts.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def moe_init(key, d_model, moe_cfg, d_ff_default, dtype):
+    e = moe_cfg.num_experts
+    d_ff = moe_cfg.expert_d_ff or d_ff_default
+    kr, ki, kg, ko, kd = jax.random.split(key, 5)
+    params = {
+        "router": L.param(kr, (d_model, e), ("embed", "experts"), dtype=jnp.float32),
+        "wi": L.param(ki, (e, d_model, d_ff), ("experts", "embed", "expert_mlp"), dtype=dtype),
+        "wg": L.param(kg, (e, d_model, d_ff), ("experts", "embed", "expert_mlp"), dtype=dtype),
+        "wo": L.param(ko, (e, d_ff, d_model), ("experts", "expert_mlp", "embed"), dtype=dtype),
+    }
+    if moe_cfg.dense_residual:
+        params["dense"] = L.mlp_init(kd, d_model, d_ff_default, dtype)
+    return params
+
+
+def moe_block(p, x, moe_cfg, *, activation="swiglu"):
+    """x: (B, S, D) -> (out (B, S, D), aux_losses dict)."""
+    B, S, D = x.shape
+    T = B * S
+    e = moe_cfg.num_experts
+    k = moe_cfg.top_k
+    cap = max(int(moe_cfg.capacity_factor * T * k / e), 1)
+
+    xt = x.reshape(T, D)
+    logits = xt.astype(jnp.float32) @ p["router"]  # (T, E) fp32 routing
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Slot assignment: position within the chosen expert via masked cumsum.
+    flat_e = expert_idx.reshape(T * k)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # (T*k, E)
+    pos = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=-1) - 1  # (T*k,)
+    keep = pos < cap
+    slot = jnp.where(keep, flat_e * cap + pos, e * cap)  # drop row at e*cap
+
+    # Dispatch: scatter token copies into the expert-input buffer.
+    tok = jnp.arange(T * k) // k
+    xs = jnp.take(xt, tok, axis=0)  # (T*k, D)
+    buf = jnp.zeros((e * cap + 1, D), x.dtype).at[slot].add(xs)
+    xe = buf[: e * cap].reshape(e, cap, D)
+    # NOTE (§Perf cell D): explicit EP pins on this buffer (experts->model,
+    # capacity->data) were tried and REFUTED — the scatter/gather dispatch
+    # reshards catastrophically against a row-sharded buffer (2.3x / 5.4x
+    # collective regressions). The correct cluster-scale fix is a shard_map
+    # all-to-all dispatch; left to XLA's propagation here.
+
+    # Expert FFNs (the EP GEMMs).
+    act = jax.nn.silu if activation in ("swiglu", "silu") else jax.nn.gelu
+    h = act(jnp.einsum("ecd,edf->ecf", xe, p["wg"])) * jnp.einsum(
+        "ecd,edf->ecf", xe, p["wi"]
+    )
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wo"])  # (E, C, D)
+
+    # Combine: gather back, weight by gates, sum the k choices.
+    ye_flat = jnp.concatenate(
+        [ye.reshape(e * cap, D), jnp.zeros((1, D), ye.dtype)], axis=0
+    )
+    y = jnp.take(ye_flat, slot, axis=0).astype(jnp.float32)
+    y = y * gate_vals.reshape(T * k, 1)
+    out = jnp.sum(y.reshape(T, k, D), axis=1).astype(x.dtype).reshape(B, S, D)
+
+    if "dense" in p:
+        out = out + L.mlp(p["dense"], x, activation=activation)
+
+    # Aux losses: load-balance (Switch-style) + router z-loss.
+    density = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], e, dtype=jnp.float32), axis=0)
+    router_prob = jnp.mean(probs, axis=0)
+    aux = {
+        "load_balance": moe_cfg.aux_loss_coef * e * jnp.sum(density * router_prob),
+        "router_z": moe_cfg.router_z_coef
+        * jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1))),
+    }
+    return out, aux

@@ -1,0 +1,258 @@
+"""Attention-free sequence mixers: RWKV6 (Finch) and Mamba2 (SSD).
+
+Both are implemented as exact linear recurrences scanned over time (compact
+HLO for the dry-run; a chunked matmul formulation is a recorded §Perf
+candidate). Decode is a single recurrence step against an O(1) state — this
+is what makes the ``long_500k`` cell runnable for the ssm/hybrid archs.
+
+RWKV6 per-head state: S in R^{hd x hd} with data-dependent per-channel decay
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T,
+    y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)           (Finch, arXiv:2404.05892)
+
+Mamba2 per-head state: h in R^{hd x N} with scalar-per-head decay
+    h_t = a_t h_{t-1} + dt_t * x_t B_t^T,   a_t = exp(-exp(A_log) dt_t)
+    y_t = h_t C_t + D x_t                              (SSD, arXiv:2405.21060)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# RWKV6
+# ---------------------------------------------------------------------------
+
+
+def rwkv_init(key, d_model, rwkv_cfg, d_ff, dtype):
+    hd = rwkv_cfg.head_dim
+    nh = d_model // hd
+    ks = jax.random.split(key, 12)
+    lora = rwkv_cfg.mix_lora
+    dl = rwkv_cfg.decay_lora
+    p = {
+        # data-dependent token-shift mixing (ddlerp)
+        "mu_base": L.param(ks[0], (5, d_model), (None, "embed"), dtype=dtype, init="zeros"),
+        "mix_a": L.param(ks[1], (d_model, 5 * lora), ("embed", "mlp"), dtype=dtype, scale=0.01),
+        "mix_b": L.param(ks[2], (5, lora, d_model), (None, "mlp", "embed"), dtype=dtype, scale=0.01),
+        # projections
+        "wr": L.param(ks[3], (d_model, d_model), ("embed", "heads_mlp"), dtype=dtype),
+        "wk": L.param(ks[4], (d_model, d_model), ("embed", "heads_mlp"), dtype=dtype),
+        "wv": L.param(ks[5], (d_model, d_model), ("embed", "heads_mlp"), dtype=dtype),
+        "wg": L.param(ks[6], (d_model, d_model), ("embed", "heads_mlp"), dtype=dtype),
+        "wo": L.param(ks[7], (d_model, d_model), ("heads_mlp", "embed"), dtype=dtype),
+        # data-dependent decay (the Finch contribution)
+        "w0": L.param(ks[8], (d_model,), ("embed",), dtype=dtype, init="zeros"),
+        "decay_a": L.param(ks[9], (d_model, dl), ("embed", "mlp"), dtype=dtype, scale=0.01),
+        "decay_b": L.param(ks[10], (dl, d_model), ("mlp", "embed"), dtype=dtype, scale=0.01),
+        "u": L.param(ks[11], (nh, hd), ("heads", "head_dim"), dtype=dtype, init="zeros"),
+        "ln_x": L.param(jax.random.fold_in(key, 99), (d_model,), ("embed",), init="ones", dtype=dtype),
+    }
+    return p
+
+
+def rwkv_time_mix(p, x, rwkv_cfg, *, state=None, return_state=False):
+    """x: (B, S, D). state: optional (shift (B, D), S (B, nh, hd, hd))."""
+    B, S, D = x.shape
+    hd = rwkv_cfg.head_dim
+    nh = D // hd
+    lora = p["mix_a"].shape[1] // 5
+
+    if state is None:
+        shift_in = jnp.zeros((B, D), x.dtype)
+    else:
+        shift_in = state[0]
+    xprev = jnp.concatenate([shift_in[:, None], x[:, :-1]], axis=1)
+    xx = xprev - x
+
+    l = jnp.tanh(x @ p["mix_a"]).reshape(B, S, 5, lora)
+    mixed = []
+    for i in range(5):
+        mix = p["mu_base"][i].astype(jnp.float32) + jnp.einsum(
+            "bsl,ld->bsd", l[:, :, i], p["mix_b"][i].astype(jnp.float32)
+        )
+        mixed.append(x + xx * mix.astype(x.dtype))
+    x_r, x_k, x_v, x_w, x_g = mixed
+
+    r = (x_r @ p["wr"]).reshape(B, S, nh, hd)
+    k = (x_k @ p["wk"]).reshape(B, S, nh, hd)
+    v = (x_v @ p["wv"]).reshape(B, S, nh, hd)
+    g = x_g @ p["wg"]
+    # Data-dependent decay in fp32: w in (0, 1).
+    dec = p["w0"].astype(jnp.float32) + jnp.tanh(
+        x_w.astype(jnp.float32) @ p["decay_a"].astype(jnp.float32)
+    ) @ p["decay_b"].astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(dec.clip(-8.0, 8.0))).reshape(B, S, nh, hd)
+
+    u = p["u"].astype(jnp.float32)
+
+    def step(Sst, xs):
+        r_t, k_t, v_t, w_t = xs  # (B, nh, hd) each
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, Sst + u[None, :, :, None] * kv)
+        Sst = w_t[..., None] * Sst + kv
+        return Sst, y
+
+    S0 = (
+        jnp.zeros((B, nh, hd, hd), jnp.float32)
+        if state is None
+        else state[1].astype(jnp.float32)
+    )
+    # Pin the recurrence to the batch axes: the carry must stay local to the
+    # batch shard or XLA re-reduces the (B, nh, hd, hd) state every step.
+    from repro.sharding import rules as _rules
+
+    S0 = _rules.constrain_batch_dim(S0, 0)
+    xs = tuple(
+        _rules.constrain_batch_dim(t, 1)
+        for t in (
+            r.transpose(1, 0, 2, 3).astype(jnp.float32),
+            k.transpose(1, 0, 2, 3).astype(jnp.float32),
+            v.transpose(1, 0, 2, 3).astype(jnp.float32),
+            w.transpose(1, 0, 2, 3),
+        )
+    )
+    S_end, ys = jax.lax.scan(step, S0, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, D)  # (B, S, D)
+    # Per-head group norm, then gate.
+    y = y.reshape(B, S, nh, hd)
+    y = (y - y.mean(-1, keepdims=True)) * jax.lax.rsqrt(y.var(-1, keepdims=True) + 1e-5)
+    y = y.reshape(B, S, D) * p["ln_x"].astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(g)) @ p["wo"]
+    if return_state:
+        return y, (x[:, -1], S_end.astype(x.dtype))
+    return y
+
+
+def rwkv_channel_mix_init(key, d_model, d_ff, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "mu_k": L.param(k1, (d_model,), ("embed",), dtype=dtype, init="zeros"),
+        "wk": L.param(k2, (d_model, d_ff), ("embed", "mlp"), dtype=dtype),
+        "wv": L.param(k3, (d_ff, d_model), ("mlp", "embed"), dtype=dtype),
+        "wr": L.param(k4, (d_model, d_model), ("embed", "heads_mlp"), dtype=dtype),
+    }
+
+
+def rwkv_channel_mix(p, x, *, state=None, return_state=False):
+    B, S, D = x.shape
+    shift_in = jnp.zeros((B, D), x.dtype) if state is None else state
+    xprev = jnp.concatenate([shift_in[:, None], x[:, :-1]], axis=1)
+    xk = x + (xprev - x) * p["mu_k"].astype(x.dtype)
+    h = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    out = jax.nn.sigmoid(x @ p["wr"]) * (h @ p["wv"])
+    if return_state:
+        return out, x[:, -1]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+
+def mamba_init(key, d_model, ssm_cfg, dtype):
+    hd = ssm_cfg.head_dim
+    n = ssm_cfg.state_dim
+    d_inner = ssm_cfg.expand * d_model
+    nh = d_inner // hd
+    ks = jax.random.split(key, 6)
+    return {
+        # in_proj emits [z, x, B, C, dt]
+        "w_in": L.param(
+            ks[0], (d_model, 2 * d_inner + 2 * n + nh), ("embed", "mlp"), dtype=dtype
+        ),
+        "conv": L.param(
+            ks[1], (ssm_cfg.conv_width, d_inner + 2 * n), (None, "mlp"),
+            dtype=dtype, scale=0.5,
+        ),
+        "a_log": L.param(ks[2], (nh,), ("heads",), dtype=jnp.float32, init="zeros"),
+        "dt_bias": L.param(ks[3], (nh,), ("heads",), dtype=jnp.float32, init="zeros"),
+        "d_skip": L.param(ks[4], (nh,), ("heads",), dtype=jnp.float32, init="ones"),
+        "norm": L.param(ks[5], (d_inner,), ("mlp",), dtype=dtype, init="ones"),
+        "w_out": L.param(
+            jax.random.fold_in(key, 7), (d_inner, d_model), ("mlp", "embed"), dtype=dtype
+        ),
+    }
+
+
+def _causal_conv(x, w, conv_state=None):
+    """Depthwise causal conv. x: (B, S, C); w: (K, C); state: (B, K-1, C)."""
+    K = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1]] * w[i][None, None, :] for i in range(K)
+    )
+    new_state = xp[:, -(K - 1) :] if K > 1 else pad
+    return out, new_state
+
+
+def mamba_block(p, x, ssm_cfg, *, state=None, return_state=False):
+    """x: (B, S, D). state: (conv_state (B, K-1, C), h (B, nh, hd, N))."""
+    B, S, D = x.shape
+    hd = ssm_cfg.head_dim
+    n = ssm_cfg.state_dim
+    d_inner = ssm_cfg.expand * D
+    nh = d_inner // hd
+
+    zxbcdt = x @ p["w_in"]
+    z, xc, b, c, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n], axis=-1
+    )
+    conv_in = jnp.concatenate([xc, b, c], axis=-1)
+    conv_state = None if state is None else state[0]
+    conv_out, conv_state_new = _causal_conv(conv_in, p["conv"], conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xc, b, c = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, S, nh)
+    a = jnp.exp(-jnp.exp(p["a_log"].clip(-8.0, 8.0)) * dt)  # (B, S, nh) in (0,1)
+    xh = xc.reshape(B, S, nh, hd).astype(jnp.float32)
+    b32 = b.astype(jnp.float32)
+    c32 = c.astype(jnp.float32)
+
+    def step(h, xs):
+        a_t, dtx_t, b_t, c_t = xs
+        # h: (B, nh, hd, N)
+        h = a_t[..., None, None] * h + jnp.einsum(
+            "bhd,bn->bhdn", dtx_t, b_t
+        )
+        y = jnp.einsum("bhdn,bn->bhd", h, c_t)
+        return h, y
+
+    h0 = (
+        jnp.zeros((B, nh, hd, n), jnp.float32)
+        if state is None
+        else state[1].astype(jnp.float32)
+    )
+    from repro.sharding import rules as _rules
+
+    h0 = _rules.constrain_batch_dim(h0, 0)
+    xs = tuple(
+        _rules.constrain_batch_dim(t, 1)
+        for t in (
+            a.transpose(1, 0, 2),
+            (dt[..., None] * xh).transpose(1, 0, 2, 3),
+            b32.transpose(1, 0, 2),
+            c32.transpose(1, 0, 2),
+        )
+    )
+    h_end, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2, 3)  # (B, S, nh, hd)
+    y = y + p["d_skip"][None, None, :, None] * xh
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    # Gated RMS norm (mamba2's norm-before-out).
+    y = y * jax.nn.silu(z)
+    y32 = y.astype(jnp.float32)
+    y = (y32 * jax.lax.rsqrt(jnp.mean(jnp.square(y32), -1, keepdims=True) + 1e-6))
+    y = (y * p["norm"].astype(jnp.float32)).astype(x.dtype)
+    out = y @ p["w_out"]
+    if return_state:
+        return out, (conv_state_new, h_end.astype(x.dtype))
+    return out

@@ -1,0 +1,571 @@
+"""Decoder-only LM assembly: one scanned block system covering the dense /
+moe / rwkv / mamba-hybrid / vlm families.
+
+Layers are homogeneous within a family, so parameters are stacked with a
+leading ``layers`` axis and the stack is driven by ``lax.scan`` (compact HLO
+for 80-layer configs, mandatory for dry-run compile times). Per-layer
+heterogeneity is data, not structure:
+
+* gemma2's local/global alternation scans a per-layer ``window`` scalar into
+  a shared body (traced window, see attention.flash_attention);
+* zamba2's shared attention block is closure-captured (one parameter set) and
+  applied every ``shared_attn_every`` layers behind a ``lax.cond``.
+
+``decode_step`` mirrors the same scan with per-layer cache slices as scan
+xs/ys; SWA caches are ring buffers (O(window) memory for 500k streams).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init/apply by family.
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, cfg):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        p = {
+            "ln1": L.norm_init(cfg.norm, cfg.d_model, dtype),
+            "attn": A.attention_init(ks[0], cfg.attn, cfg.d_model, dtype),
+            "ln2": L.norm_init(cfg.norm, cfg.d_model, dtype),
+            "mlp": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype, activation=cfg.activation),
+        }
+        if cfg.post_norm:
+            p["ln1_post"] = L.norm_init(cfg.norm, cfg.d_model, dtype)
+            p["ln2_post"] = L.norm_init(cfg.norm, cfg.d_model, dtype)
+        return p
+    if fam == "moe":
+        return {
+            "ln1": L.norm_init(cfg.norm, cfg.d_model, dtype),
+            "attn": A.attention_init(ks[0], cfg.attn, cfg.d_model, dtype),
+            "ln2": L.norm_init(cfg.norm, cfg.d_model, dtype),
+            "moe": M.moe_init(ks[1], cfg.d_model, cfg.moe, cfg.d_ff, dtype),
+        }
+    if fam == "rwkv":
+        return {
+            "ln1": L.norm_init(cfg.norm, cfg.d_model, dtype),
+            "tmix": S.rwkv_init(ks[0], cfg.d_model, cfg.rwkv, cfg.d_ff, dtype),
+            "ln2": L.norm_init(cfg.norm, cfg.d_model, dtype),
+            "cmix": S.rwkv_channel_mix_init(ks[1], cfg.d_model, cfg.d_ff, dtype),
+        }
+    if fam == "mamba_hybrid":
+        return {
+            "ln1": L.norm_init(cfg.norm, cfg.d_model, dtype),
+            "mamba": S.mamba_init(ks[0], cfg.d_model, cfg.ssm, dtype),
+        }
+    raise ValueError(fam)
+
+
+def _shared_block_init(key, cfg):
+    """zamba2's shared attention+MLP block (single parameter set)."""
+    dtype = jnp.dtype(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.norm_init(cfg.norm, cfg.d_model, dtype),
+        "attn": A.attention_init(k1, cfg.attn, cfg.d_model, dtype),
+        "ln2": L.norm_init(cfg.norm, cfg.d_model, dtype),
+        "mlp": L.mlp_init(k2, cfg.d_model, cfg.d_ff, dtype, activation=cfg.activation),
+    }
+
+
+def _stack(trees):
+    is_p = lambda x: isinstance(x, L.Param)
+    return jax.tree.map(
+        lambda *ps: L.Param(
+            jnp.stack([p.value for p in ps]), ("layers",) + ps[0].axes
+        ),
+        *trees,
+        is_leaf=is_p,
+    )
+
+
+def init_lm(key, cfg):
+    """Full parameter tree (Param leaves, logical axes attached)."""
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_embed, k_layers, k_head, k_shared = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    params = {
+        "embed": L.embed_init(k_embed, cfg.vocab_padded, cfg.d_model, dtype),
+        "layers": _stack([_layer_init(k, cfg) for k in layer_keys]),
+        "final_norm": L.norm_init(cfg.norm, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "w": L.param(k_head, (cfg.d_model, cfg.vocab_padded),
+                         ("embed", "vocab"), dtype=dtype)
+        }
+    if cfg.shared_attn_every:
+        params["shared"] = _shared_block_init(k_shared, cfg)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Per-layer static schedules (data, not structure).
+# ---------------------------------------------------------------------------
+
+
+def layer_windows(cfg):
+    """(L,) int32 per-layer SWA window; 0 disables."""
+    w = jnp.zeros((cfg.num_layers,), jnp.int32)
+    if cfg.attn and cfg.attn.window:
+        if cfg.attn.local_global_period:
+            pat = jnp.arange(cfg.num_layers) % cfg.attn.local_global_period == 0
+            w = jnp.where(pat, cfg.attn.window, 0)
+        else:
+            w = jnp.full((cfg.num_layers,), cfg.attn.window, jnp.int32)
+    return w
+
+
+def shared_flags(cfg):
+    if not cfg.shared_attn_every:
+        return jnp.zeros((cfg.num_layers,), bool)
+    return jnp.arange(cfg.num_layers) % cfg.shared_attn_every == 0
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill).
+# ---------------------------------------------------------------------------
+
+
+def _apply_shared_block(shared, x, positions, cfg):
+    y = A.attn_block(
+        shared["attn"], L.apply_norm(cfg.norm, shared["ln1"], x), positions,
+        cfg.attn, causal=True, window=cfg.attn.window,
+    )
+    x = x + y
+    x = x + L.mlp(shared["mlp"], L.apply_norm(cfg.norm, shared["ln2"], x),
+                  activation=cfg.activation)
+    return x
+
+
+def _layer_fwd(lp, x, positions, cfg, window, shared_vals, shared_flag,
+               collect_cache: bool):
+    """One layer. Returns (x, (aux, cache_kv))."""
+    from repro.sharding import rules as _rules
+
+    fam = cfg.family
+    # Pin the residual stream to the batch axes at every layer boundary so
+    # XLA's propagation can never replicate activations inside the scanned
+    # loop (measured: 65 GB/layer of backward all-gathers on rwkv6 without
+    # this — EXPERIMENTS.md §Perf).
+    if cfg.pin_batch:
+        x = _rules.constrain_batch_dim(x, 0)
+    aux = {"load_balance": jnp.zeros((), jnp.float32),
+           "router_z": jnp.zeros((), jnp.float32)}
+    cache = None
+    if fam in ("dense", "vlm", "moe"):
+        h = L.apply_norm(cfg.norm, lp["ln1"], x)
+        q, k, v = A.qkv(lp["attn"], h, positions, cfg.attn)
+        o = A.flash_attention(
+            q, k, v, causal=True, window=window, cap=cfg.attn.softcap
+        )
+        y = jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+        if cfg.post_norm:
+            y = L.apply_norm(cfg.norm, lp["ln1_post"], y)
+        x = x + y
+        h = L.apply_norm(cfg.norm, lp["ln2"], x)
+        if fam == "moe":
+            y, aux = M.moe_block(lp["moe"], h, cfg.moe, activation=cfg.activation)
+        else:
+            y = L.mlp(lp["mlp"], h, activation=cfg.activation)
+        if cfg.post_norm:
+            y = L.apply_norm(cfg.norm, lp["ln2_post"], y)
+        x = x + y
+        if collect_cache:
+            cache = (k, v)
+    elif fam == "rwkv":
+        h = L.apply_norm(cfg.norm, lp["ln1"], x)
+        if collect_cache:
+            y, tstate = S.rwkv_time_mix(lp["tmix"], h, cfg.rwkv, return_state=True)
+        else:
+            y = S.rwkv_time_mix(lp["tmix"], h, cfg.rwkv)
+            tstate = None
+        x = x + y
+        h = L.apply_norm(cfg.norm, lp["ln2"], x)
+        if collect_cache:
+            y, cstate = S.rwkv_channel_mix(lp["cmix"], h, return_state=True)
+            cache = (tstate, cstate)
+        else:
+            y = S.rwkv_channel_mix(lp["cmix"], h)
+        x = x + y
+    elif fam == "mamba_hybrid":
+        h = L.apply_norm(cfg.norm, lp["ln1"], x)
+        if collect_cache:
+            y, mstate = S.mamba_block(lp["mamba"], h, cfg.ssm, return_state=True)
+            cache = mstate
+        else:
+            y = S.mamba_block(lp["mamba"], h, cfg.ssm)
+        x = x + y
+    else:
+        raise ValueError(fam)
+    return x, (aux, cache)
+
+
+def hybrid_groups(cfg):
+    """(n_groups, group_size, tail) for the shared-block group scan.
+
+    The zamba2 pattern — shared attention before layers 0, every, 2*every, …
+    — is expressed as a scan over groups of ``every`` mamba layers, each
+    preceded by the shared block, plus an explicit tail. No lax.cond: FLOPs
+    stay statically attributable (roofline/hloparse.py)."""
+    every = cfg.shared_attn_every
+    n_groups = cfg.num_layers // every
+    tail = cfg.num_layers - n_groups * every
+    return n_groups, every, tail
+
+
+def _group_layers(values_layers, cfg):
+    n_groups, every, tail = hybrid_groups(cfg)
+    main = jax.tree.map(
+        lambda a: a[: n_groups * every].reshape(n_groups, every, *a.shape[1:]),
+        values_layers,
+    )
+    tailp = jax.tree.map(lambda a: a[n_groups * every :], values_layers)
+    return main, tailp
+
+
+def _forward_hybrid(values, cfg, x, positions, collect_cache):
+    """zamba2: (shared block + ``every`` mamba layers) x n_groups + tail."""
+    shared_vals = values["shared"]
+    main, tailp = _group_layers(values["layers"], cfg)
+    n_groups, every, tail = hybrid_groups(cfg)
+
+    def inner(x, lp):
+        return _layer_fwd(lp, x, positions, cfg, None, None, None,
+                          collect_cache)
+
+    if cfg.remat:
+        inner = jax.checkpoint(inner)
+
+    def group(x, gp):
+        x = _apply_shared_block(shared_vals, x, positions, cfg)
+        return jax.lax.scan(inner, x, gp,
+                            unroll=1 if cfg.scan_layers else every)
+
+    x, (aux, caches_main) = jax.lax.scan(
+        group, x, main, unroll=1 if cfg.scan_layers else n_groups
+    )
+    caches_tail = None
+    if tail:
+        x = _apply_shared_block(shared_vals, x, positions, cfg)
+        x, (aux_t, caches_tail) = jax.lax.scan(inner, x, tailp)
+        aux = jax.tree.map(lambda a, b: jnp.concatenate([a.reshape(-1), b]),
+                           aux, aux_t)
+    return x, aux, (caches_main, caches_tail)
+
+
+def forward_lm(values, cfg, tokens, *, embeds=None, collect_cache=False,
+               return_hidden=False):
+    """values: plain-array tree (Param.value). tokens: (B, S) int32.
+
+    ``embeds``: optional (B, P, D) precomputed frontend embeddings (vision /
+    audio stub) that replace the first P token positions.
+    Returns (logits fp32 (B, S, vocab_padded), aux dict[, cache]); with
+    ``return_hidden`` the first element is the final hidden state instead
+    (callers chunk the vocab projection themselves — see ``lm_loss``).
+    """
+    B, S = tokens.shape
+    x = L.embed_lookup(values["embed"], tokens)
+    if cfg.family == "vlm" and embeds is not None:
+        P = embeds.shape[1]
+        x = jnp.concatenate([embeds.astype(x.dtype), x[:, P:]], axis=1)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    if cfg.family == "mamba_hybrid" and cfg.shared_attn_every:
+        x, aux, caches = _forward_hybrid(values, cfg, x, positions,
+                                         collect_cache)
+    else:
+        windows = layer_windows(cfg)
+
+        def body(x, xs):
+            lp, window = xs
+            return _layer_fwd(lp, x, positions, cfg, window, None, None,
+                              collect_cache)
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, (aux, caches) = jax.lax.scan(
+            body, x, (values["layers"], windows),
+            unroll=1 if cfg.scan_layers else cfg.num_layers,
+        )
+    aux = jax.tree.map(jnp.sum, aux)
+    x = L.apply_norm(cfg.norm, values["final_norm"], x)
+    if return_hidden:
+        return x, aux
+    logits = project_logits(values, cfg, x)
+    if collect_cache:
+        return logits, aux, caches
+    return logits, aux
+
+
+def project_logits(values, cfg, x):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, values["embed"]["tokens"])
+    else:
+        logits = x @ values["lm_head"]["w"]
+    return L.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+
+
+def chunked_xent(values, cfg, x, labels):
+    """Next-token cross-entropy scanning sequence chunks, so the (tokens,
+    vocab) logits tensor never materialises beyond one chunk (the 1.07 TB
+    fp32 logits of gemma2 at train_4k become ~34 GB peak global)."""
+    B, S, D = x.shape
+    c = min(cfg.loss_chunk, S)
+    n_chunks = S // c if S % c == 0 else 1
+    if S % c != 0:
+        c = S
+    xc = x.reshape(B, n_chunks, c, D).swapaxes(0, 1)  # (n, B, c, D)
+    lc = labels.reshape(B, n_chunks, c).swapaxes(0, 1)
+
+    def chunk(carry, xs):
+        from repro.sharding import rules as _rules
+
+        xi, li = xs
+        if cfg.pin_batch:
+            # Batch-sharded logits: without the pin XLA may all-reduce the
+            # *global* (tokens, vocab) chunk (2^37 bytes on rwkv6/dp).
+            xi = _rules.constrain_batch_dim(xi, 0)
+        logits = project_logits(values, cfg, xi)
+        if cfg.pin_batch:
+            logits = _rules.constrain_batch_dim(logits, 0)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, li[..., None], axis=-1)[..., 0]
+        mask = li >= 0
+        s = carry[0] - jnp.sum(jnp.where(mask, ll, 0.0))
+        n = carry[1] + jnp.sum(mask)
+        return (s, n), None
+
+    (s, n), _ = jax.lax.scan(
+        chunk, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), (xc, lc)
+    )
+    return s / jnp.maximum(n, 1)
+
+
+def lm_loss(values, cfg, tokens, labels, *, embeds=None):
+    """Mean next-token cross-entropy (fp32, vocab-chunked) + aux losses."""
+    x, aux = forward_lm(values, cfg, tokens, embeds=embeds, return_hidden=True)
+    loss = chunked_xent(values, cfg, x, labels)
+    total = loss + aux["load_balance"] + aux["router_z"]
+    metrics = {"loss": loss, **aux}
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token against per-layer caches).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    """Static description of the decode cache for (cfg, batch, slots)."""
+    batch: int
+    slots: int          # KV slots: window size for ring caches
+    ring: bool
+
+
+def cache_spec(cfg, batch: int, seq_len: int) -> CacheSpec:
+    ring = bool(
+        cfg.attn and cfg.attn.window and not cfg.attn.local_global_period
+    )
+    slots = min(cfg.attn.window, seq_len) if ring else seq_len
+    if cfg.family in ("rwkv",):
+        slots = 0
+    return CacheSpec(batch=batch, slots=slots, ring=ring)
+
+
+def init_cache(cfg, spec: CacheSpec, dtype=jnp.bfloat16):
+    B = spec.batch
+    Lc = cfg.num_layers
+    fam = cfg.family
+    cache = {"pos": jnp.zeros((), jnp.int32)}
+    if fam in ("dense", "vlm", "moe"):
+        kvs = (Lc, B, spec.slots, cfg.attn.num_kv_heads, cfg.attn.head_dim)
+        cache["k"] = jnp.zeros(kvs, dtype)
+        cache["v"] = jnp.zeros(kvs, dtype)
+    elif fam == "rwkv":
+        hd = cfg.rwkv.head_dim
+        nh = cfg.d_model // hd
+        cache["shift_t"] = jnp.zeros((Lc, B, cfg.d_model), dtype)
+        cache["shift_c"] = jnp.zeros((Lc, B, cfg.d_model), dtype)
+        cache["S"] = jnp.zeros((Lc, B, nh, hd, hd), dtype)
+    elif fam == "mamba_hybrid":
+        d_inner = cfg.ssm.expand * cfg.d_model
+        nh = d_inner // cfg.ssm.head_dim
+        conv_c = d_inner + 2 * cfg.ssm.state_dim
+        cache["conv"] = jnp.zeros((Lc, B, cfg.ssm.conv_width - 1, conv_c), dtype)
+        cache["h"] = jnp.zeros((Lc, B, nh, cfg.ssm.head_dim, cfg.ssm.state_dim), dtype)
+        n_groups, _, tail = hybrid_groups(cfg)
+        n_occ = n_groups + (1 if tail else 0)
+        w = min(cfg.attn.window or spec.slots, spec.slots) if cfg.attn else spec.slots
+        kvs = (n_occ, B, w, cfg.attn.num_kv_heads, cfg.attn.head_dim)
+        cache["sk"] = jnp.zeros(kvs, dtype)
+        cache["sv"] = jnp.zeros(kvs, dtype)
+    return cache
+
+
+def decode_step(values, cfg, cache, tokens):
+    """One decode step. tokens: (B,) int32. Returns (logits (B, V), cache)."""
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    x = L.embed_lookup(values["embed"], tokens)  # (B, D)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), x.dtype)
+    windows = layer_windows(cfg)
+    flags = shared_flags(cfg)
+    fam = cfg.family
+    new_cache = dict(cache)
+
+    if fam in ("dense", "vlm", "moe"):
+        ring = bool(cfg.attn.window and not cfg.attn.local_global_period
+                    and cache["k"].shape[2] <= cfg.attn.window)
+        slots = cache["k"].shape[2]
+        write_at = jnp.mod(pos, slots) if ring else jnp.minimum(pos, slots - 1)
+
+        def body(x, xs):
+            lp, ck, cv, window = xs
+            h = L.apply_norm(cfg.norm, lp["ln1"], x)
+            o, k1, v1 = A.decode_attn(
+                lp["attn"], h, ck, cv, pos, cfg.attn,
+                window=window, ring=ring,
+            )
+            if cfg.post_norm:
+                o = L.apply_norm(cfg.norm, lp["ln1_post"], o)
+            x = x + o
+            h = L.apply_norm(cfg.norm, lp["ln2"], x)
+            if fam == "moe":
+                y, _ = M.moe_block(lp["moe"], h[:, None], cfg.moe,
+                                   activation=cfg.activation)
+                y = y[:, 0]
+            else:
+                y = L.mlp(lp["mlp"], h, activation=cfg.activation)
+            if cfg.post_norm:
+                y = L.apply_norm(cfg.norm, lp["ln2_post"], y)
+            x = x + y
+            ck = jax.lax.dynamic_update_index_in_dim(
+                ck, k1.astype(ck.dtype), write_at, axis=1
+            )
+            cv = jax.lax.dynamic_update_index_in_dim(
+                cv, v1.astype(cv.dtype), write_at, axis=1
+            )
+            return x, (ck, cv)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (values["layers"], cache["k"], cache["v"], windows)
+        )
+        new_cache["k"], new_cache["v"] = k_new, v_new
+
+    elif fam == "rwkv":
+
+        def body(x, xs):
+            lp, sh_t, Sst, sh_c = xs
+            h = L.apply_norm(cfg.norm, lp["ln1"], x)[:, None]
+            y, (sh_t2, S2) = S.rwkv_time_mix(
+                lp["tmix"], h, cfg.rwkv, state=(sh_t, Sst), return_state=True
+            )
+            x = x + y[:, 0]
+            h = L.apply_norm(cfg.norm, lp["ln2"], x)[:, None]
+            y, sh_c2 = S.rwkv_channel_mix(lp["cmix"], h, state=sh_c, return_state=True)
+            x = x + y[:, 0]
+            return x, (sh_t2.astype(sh_t.dtype), S2.astype(Sst.dtype),
+                       sh_c2.astype(sh_c.dtype))
+
+        x, (sh_t, Sst, sh_c) = jax.lax.scan(
+            body, x, (values["layers"], cache["shift_t"], cache["S"], cache["shift_c"])
+        )
+        new_cache["shift_t"], new_cache["S"], new_cache["shift_c"] = sh_t, Sst, sh_c
+
+    elif fam == "mamba_hybrid":
+        shared_vals = values["shared"]
+        w_slots = cache["sk"].shape[2]
+        write_at = jnp.mod(pos, w_slots)
+        n_groups, every, tail = hybrid_groups(cfg)
+
+        def shared_step(x, ck, cv):
+            h = L.apply_norm(cfg.norm, shared_vals["ln1"], x)
+            o, k1, v1 = A.decode_attn(
+                shared_vals["attn"], h, ck, cv, pos, cfg.attn, ring=True
+            )
+            x = x + o
+            x = x + L.mlp(shared_vals["mlp"],
+                          L.apply_norm(cfg.norm, shared_vals["ln2"], x),
+                          activation=cfg.activation)
+            ck = jax.lax.dynamic_update_index_in_dim(ck, k1.astype(ck.dtype), write_at, axis=1)
+            cv = jax.lax.dynamic_update_index_in_dim(cv, v1.astype(cv.dtype), write_at, axis=1)
+            return x, ck, cv
+
+        def mamba_step(x, xs):
+            lp, conv_st, h_st = xs
+            h = L.apply_norm(cfg.norm, lp["ln1"], x)[:, None]
+            y, (conv2, h2) = S.mamba_block(
+                lp["mamba"], h, cfg.ssm, state=(conv_st, h_st), return_state=True
+            )
+            x = x + y[:, 0]
+            return x, (conv2.astype(conv_st.dtype), h2.astype(h_st.dtype))
+
+        main_p, tail_p = _group_layers(values["layers"], cfg)
+        conv_main, conv_tail = (
+            cache["conv"][: n_groups * every].reshape(
+                n_groups, every, *cache["conv"].shape[1:]
+            ),
+            cache["conv"][n_groups * every :],
+        )
+        h_main, h_tail = (
+            cache["h"][: n_groups * every].reshape(
+                n_groups, every, *cache["h"].shape[1:]
+            ),
+            cache["h"][n_groups * every :],
+        )
+
+        def group(x, xs):
+            gp, conv_g, h_g, ck, cv = xs
+            x, ck, cv = shared_step(x, ck, cv)
+            x, (conv2, h2) = jax.lax.scan(mamba_step, x, (gp, conv_g, h_g))
+            return x, (conv2, h2, ck, cv)
+
+        sk_main, sk_tail = cache["sk"][:n_groups], cache["sk"][n_groups:]
+        sv_main, sv_tail = cache["sv"][:n_groups], cache["sv"][n_groups:]
+        x, (conv_new, h_new, sk_new, sv_new) = jax.lax.scan(
+            group, x, (main_p, conv_main, h_main, sk_main, sv_main)
+        )
+        conv_new = conv_new.reshape(-1, *conv_new.shape[2:])
+        h_new = h_new.reshape(-1, *h_new.shape[2:])
+        if tail:
+            x, ck_t, cv_t = shared_step(x, sk_tail[0], sv_tail[0])
+            x, (conv_t, h_t) = jax.lax.scan(
+                mamba_step, x, (tail_p, conv_tail, h_tail)
+            )
+            conv_new = jnp.concatenate([conv_new, conv_t], axis=0)
+            h_new = jnp.concatenate([h_new, h_t], axis=0)
+            sk_new = jnp.concatenate([sk_new, ck_t[None]], axis=0)
+            sv_new = jnp.concatenate([sv_new, cv_t[None]], axis=0)
+        new_cache["conv"], new_cache["h"] = conv_new, h_new
+        new_cache["sk"], new_cache["sv"] = sk_new, sv_new
+
+    else:
+        raise ValueError(fam)
+
+    x = L.apply_norm(cfg.norm, values["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bd,vd->bv", x, values["embed"]["tokens"])
+    else:
+        logits = x @ values["lm_head"]["w"]
+    logits = L.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache

@@ -1,0 +1,32 @@
+from repro.optim.adamw import adamw
+from repro.optim.base import Optimizer, apply_updates, cast_tree, global_norm
+from repro.optim.cholesky_precond import cholesky_precond
+from repro.optim.clip import all_finite, clip_by_global_norm
+from repro.optim.schedule import constant, inverse_sqrt, warmup_cosine
+from repro.optim.sgd import sgd
+
+__all__ = [
+    "Optimizer",
+    "apply_updates",
+    "global_norm",
+    "cast_tree",
+    "adamw",
+    "sgd",
+    "cholesky_precond",
+    "clip_by_global_norm",
+    "all_finite",
+    "constant",
+    "inverse_sqrt",
+    "warmup_cosine",
+]
+
+
+def get_optimizer(name: str, lr, **kw) -> Optimizer:
+    """Config-driven optimizer factory."""
+    if name == "adamw":
+        return adamw(lr, **kw)
+    if name == "sgd":
+        return sgd(lr, **kw)
+    if name == "cholesky_precond":
+        return cholesky_precond(lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,65 @@
+"""AdamW with fp32 state over possibly-lower-precision params (baseline optimizer)."""
+from __future__ import annotations
+
+from typing import Callable, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+ScheduleOrFloat = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
+
+
+def _lr_at(lr: ScheduleOrFloat, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def adamw(
+    lr: ScheduleOrFloat = 1e-3,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    state_dtype=jnp.float32,
+) -> Optimizer:
+    """AdamW. ``state_dtype`` may be bf16 for memory-squeezed mega models."""
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            mhat = m_new / bc1
+            vhat = v_new / bc2
+            delta = -lr_t * (
+                mhat / (jnp.sqrt(vhat) + eps)
+                + weight_decay * p.astype(jnp.float32)
+            )
+            return delta, m_new.astype(state_dtype), v_new.astype(state_dtype)
+
+        g_flat, treedef = jax.tree.flatten(grads)
+        m_flat = treedef.flatten_up_to(state["m"])
+        v_flat = treedef.flatten_up_to(state["v"])
+        p_flat = treedef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(g_flat, m_flat, v_flat, p_flat)]
+        deltas = treedef.unflatten([o[0] for o in out])
+        m_new = treedef.unflatten([o[1] for o in out])
+        v_new = treedef.unflatten([o[2] for o in out])
+        return deltas, {"step": step, "m": m_new, "v": v_new}
+
+    return Optimizer(init=init, update=update)

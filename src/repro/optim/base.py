@@ -1,0 +1,41 @@
+"""Minimal functional optimizer substrate (no optax in the container).
+
+An ``Optimizer`` is an (init, update) pair over parameter pytrees:
+
+    state   = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params  = apply_updates(params, updates)
+
+Updates are *deltas* (already scaled by the learning rate, sign included).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]  # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p + u.astype(p.dtype)) if u is not None else p,
+        params,
+        updates,
+        is_leaf=lambda x: x is None,
+    )
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), tree)

@@ -1,0 +1,19 @@
+"""Gradient clipping / finiteness guards."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import global_norm
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Returns (clipped_grads, pre_clip_norm)."""
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def all_finite(tree):
+    leaves = [jnp.all(jnp.isfinite(x)) for x in jax.tree.leaves(tree)]
+    return jnp.all(jnp.stack(leaves))

@@ -1,0 +1,33 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def warmup_cosine(peak: float, *, warmup_steps: int, total_steps: int, floor: float = 0.0):
+    """Linear warmup to ``peak`` then cosine decay to ``floor``."""
+
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup_steps, 1)
+        prog = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return sched
+
+
+def inverse_sqrt(peak: float, *, warmup_steps: int):
+    def sched(step):
+        step = jnp.maximum(step.astype(jnp.float32), 1.0)
+        warm = peak * step / max(warmup_steps, 1)
+        decay = peak * jnp.sqrt(warmup_steps / step)
+        return jnp.where(step < warmup_steps, warm, decay)
+
+    return sched

@@ -1,0 +1,36 @@
+"""SGD with momentum (reference/baseline optimizer)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import _lr_at
+from repro.optim.base import Optimizer
+
+
+def sgd(lr=1e-2, *, momentum: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def update(grads, state, params):
+        del params
+        step = state["step"] + 1
+        lr_t = _lr_at(lr, step)
+
+        def upd(g, mu):
+            g32 = g.astype(jnp.float32)
+            mu_new = momentum * mu + g32
+            d = g32 + momentum * mu_new if nesterov else mu_new
+            return -lr_t * d, mu_new
+
+        g_flat, treedef = jax.tree.flatten(grads)
+        mu_flat = treedef.flatten_up_to(state["mu"])
+        out = [upd(g, mu) for g, mu in zip(g_flat, mu_flat)]
+        deltas = treedef.unflatten([o[0] for o in out])
+        mu_new = treedef.unflatten([o[1] for o in out])
+        return deltas, {"step": step, "mu": mu_new}
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,3 @@
+from repro.roofline import analysis, hloparse
+
+__all__ = ["analysis", "hloparse"]

@@ -1,0 +1,7 @@
+from repro.runtime.fault_tolerance import (
+    ResilientLoop,
+    StragglerMonitor,
+    elastic_reshard,
+)
+
+__all__ = ["ResilientLoop", "StragglerMonitor", "elastic_reshard"]

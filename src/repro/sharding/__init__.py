@@ -1,0 +1,3 @@
+from repro.sharding import rules
+
+__all__ = ["rules"]

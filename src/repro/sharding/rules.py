@@ -1,0 +1,208 @@
+"""Logical-axis -> mesh-axis lowering (DP / FSDP / TP / EP / SP policies).
+
+Every parameter carries a tuple of logical axis names (models/layers.py).
+``logical_to_spec`` lowers those to a PartitionSpec under the given mesh with
+*divisibility fallback*: a dimension whose size does not divide the assigned
+mesh axes is replicated instead (and the event recorded) — this is how the
+24-head llama3.2 / 56-head arctic exceptions are handled uniformly rather
+than as per-arch hacks (DESIGN.md §7).
+
+Policies:
+* TP   — 'heads', 'kv_heads', 'mlp', 'expert_mlp', 'vocab', 'heads_mlp'
+         shard over the model axis.
+* EP   — 'experts' shards over the model axis (arctic 128/16); when the
+         expert count does not divide (mixtral 8e), experts replicate and
+         'expert_mlp' still shards (TP-within-expert).
+* FSDP — with ``cfg.fsdp``, the 'embed' axis of weight matrices shards over
+         the data axes (ZeRO-3-style; XLA SPMD inserts the per-layer
+         all-gathers).
+* DP/SP— batch shards over ('pod','data'); sequence sharding of activations
+         is an optimizer-level constraint (train_step), not a weight spec.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> role
+_TP_AXES = ("heads", "kv_heads", "mlp", "expert_mlp", "vocab", "heads_mlp")
+_EP_AXES = ("experts",)
+_FSDP_AXES = ("embed",)
+
+# Ambient batch-axis assignment for activation constraints inside model code
+# (scan carries etc.). Step builders set this to match the batch sharding
+# policy before lowering; model code calls constrain_batch_dim.
+_BATCH_AXES: Tuple[str, ...] = ("data",)
+
+
+def set_batch_axes(axes: Tuple[str, ...]):
+    global _BATCH_AXES
+    _BATCH_AXES = tuple(axes)
+
+
+def constrain_dims(x, dim_axes):
+    """Pin selected dims of ``x`` to mesh axes, others unconstrained.
+    ``dim_axes``: {dim_index: axis-name-or-tuple}. No-op without a mesh."""
+    spec = [P.UNCONSTRAINED] * x.ndim
+    for d, ax in dim_axes.items():
+        spec[d] = ax
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x
+
+
+def constrain_batch_dim(x, dim: int):
+    """Pin dimension ``dim`` of ``x`` to the ambient batch axes, leaving the
+    other dims unconstrained (auto). No-op without a mesh in context (keeps
+    single-device tests unaffected).
+
+    Without this, XLA's auto propagation is free to replicate the carry of a
+    long time scan (RWKV/Mamba recurrences) and re-reduce it every step —
+    measured as a 40x collective blow-up on rwkv6 train_4k (EXPERIMENTS.md
+    §Perf)."""
+    axes = _BATCH_AXES
+    if x.shape[dim] == 0 or not axes:
+        return x
+    spec = [P.UNCONSTRAINED] * x.ndim
+    spec[dim] = tuple(axes) if len(axes) > 1 else axes[0]
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x
+
+
+def _mesh_axes_size(mesh: Mesh, names: Sequence[str]) -> int:
+    n = 1
+    for name in names:
+        n *= mesh.shape[name]
+    return n
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def model_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("model",) if "model" in mesh.shape else ()
+
+
+def logical_to_spec(
+    axes: Tuple[Optional[str], ...],
+    shape: Tuple[int, ...],
+    mesh: Mesh,
+    *,
+    fsdp: bool = False,
+    policy: str = "tp",
+    notes: Optional[list] = None,
+) -> P:
+    """Lower one parameter's logical axes to a PartitionSpec.
+
+    policy='tp' (default): TP/EP over the model axis, optional FSDP over the
+    data axes. policy='dp': no TP — every device is a data shard and params
+    fully shard (ZeRO-3) over data+model; the right choice for models whose
+    head/expert counts do not divide the model axis (llama3.2's 24 heads,
+    rwkv6's 40 heads) or that are too small to amortise TP collectives.
+    """
+    tp = model_axes(mesh)
+    dp = data_axes(mesh)
+    if policy == "dp":
+        tp = ()
+        dp = data_axes(mesh) + model_axes(mesh)
+        fsdp = True
+    spec = []
+    used = set()
+    for ax, dim in zip(axes, shape):
+        assign: Tuple[str, ...] = ()
+        if ax in _TP_AXES or ax in _EP_AXES:
+            assign = tp
+        elif ax in _FSDP_AXES and fsdp:
+            assign = dp
+        if assign and any(a in used for a in assign):
+            assign = ()  # one mesh axis may shard only one tensor dim
+        if assign:
+            size = _mesh_axes_size(mesh, assign)
+            if dim % size != 0:
+                if notes is not None:
+                    notes.append((ax, dim, size))
+                assign = ()
+        spec.append(assign if assign else None)
+        used.update(assign)
+    # PartitionSpec wants plain names for single axes.
+    return P(*[s[0] if (s and len(s) == 1) else s for s in spec])
+
+
+def param_specs(axes_tree, values_tree, mesh, *, fsdp=False, policy="tp"):
+    """Specs for a whole parameter tree; returns (specs_tree, notes)."""
+    notes: list = []
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x
+    )
+    specs = jax.tree.map(
+        lambda a, v: logical_to_spec(
+            a, v.shape, mesh, fsdp=fsdp, policy=policy, notes=notes
+        ),
+        axes_tree,
+        values_tree,
+        is_leaf=is_axes,
+    )
+    return specs, notes
+
+
+def param_shardings(axes_tree, values_tree, mesh, *, fsdp=False):
+    specs, notes = param_specs(axes_tree, values_tree, mesh, fsdp=fsdp)
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return shardings, notes
+
+
+def batch_spec(mesh: Mesh, ndim: int, *, batch_axis: int = 0) -> P:
+    """Shard the batch dimension over the data axes, rest replicated."""
+    dp = data_axes(mesh)
+    spec = [None] * ndim
+    spec[batch_axis] = dp if len(dp) > 1 else (dp[0] if dp else None)
+    return P(*spec)
+
+
+def cache_specs(cache_tree, cfg, mesh):
+    """Decode-cache shardings: batch over data axes when divisible, KV heads
+    over the model axis; SSM states: heads over model. Replicate otherwise."""
+    tp = model_axes(mesh)
+    dp = data_axes(mesh)
+    dp_size = _mesh_axes_size(mesh, dp) if dp else 1
+    tp_size = _mesh_axes_size(mesh, tp) if tp else 1
+    dp_name = dp if len(dp) > 1 else (dp[0] if dp else None)
+    tp_name = tp[0] if tp else None
+
+    def spec_for(path, leaf):
+        name = path[-1] if path else ""
+        if leaf.ndim == 0:
+            return P()
+        batch_dims = {
+            # cache array name -> (batch axis index, head axis index or None)
+            "k": (1, 3), "v": (1, 3), "xk": (1, 3), "xv": (1, 3),
+            "sk": (1, 3), "sv": (1, 3),
+            "shift_t": (1, None), "shift_c": (1, None),
+            "S": (1, 2), "h": (1, 2), "conv": (1, None),
+        }
+        if name not in batch_dims:
+            return P()
+        b_ax, h_ax = batch_dims[name]
+        spec = [None] * leaf.ndim
+        if dp and leaf.shape[b_ax] % dp_size == 0:
+            spec[b_ax] = dp_name
+        if h_ax is not None and tp and leaf.shape[h_ax] % tp_size == 0:
+            spec[h_ax] = tp_name
+        return P(*spec)
+
+    paths_leaves = jax.tree_util.tree_flatten_with_path(cache_tree)[0]
+    treedef = jax.tree.structure(cache_tree)
+    specs = [
+        spec_for(tuple(getattr(k, "key", str(k)) for k in path), leaf)
+        for path, leaf in paths_leaves
+    ]
+    return jax.tree.unflatten(treedef, specs)
