@@ -10,11 +10,15 @@ benchmarked here:
 * ``paper``       — panelled, element-wise panel apply (the GPU kernel's
                     algorithm, bandwidth-bound),
 * ``gemm``        — panelled, transform-GEMM panel apply (the TPU-native
-                    adaptation; BLAS plays the MXU role on this host).
+                    adaptation; BLAS plays the MXU role on this host),
+* ``fused``       — the single-launch pipelined Pallas kernel (DESIGN.md §5),
+                    timed against the per-panel kernel cascade with the
+                    launch-count delta recorded alongside wall-clock.
 
 Derived columns reproduce the paper's claims: the n^2 scaling exponent, the
 panelled-vs-serial speedup and its crossover n, rank-16-vs-16x-rank-1
-batching gain, and the error metric.
+batching gain, and the error metric; plus the fused-vs-cascade launch and
+wall-clock deltas and the batched (serving) throughput.
 """
 from __future__ import annotations
 
@@ -25,7 +29,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import blocked, ref
-from repro.core.api import chol_update
+from repro.core.api import chol_update, chol_update_batched
+from repro.kernels import fused as fused_k
+from repro.kernels import ops as kernel_ops
 
 
 def make_problem(n, k, seed=0, downdate=False):
@@ -125,5 +131,71 @@ def run(csv_rows, *, ns=(512, 1024, 2048, 4096), ks=(16, 1), quick=False):
     csv_rows.append(
         (f"cholupdate/rank16_batching_gain/n{n}", t16 * 1e6,
          f"vs_16x_rank1={tseq / t16:.2f}x")
+    )
+
+    # --- fused single-launch pipeline vs the per-panel kernel cascade ------
+    # Interpret mode off-TPU: wall-clock is not TPU performance, but the
+    # launch-count column is exact and the timing ratio still shows the
+    # Python/dispatch overhead the fusion removes.
+    interpret = jax.default_backend() != "tpu"
+    fused_ns = (256,) if quick else (256, 512)
+    kf = 16
+    for n in fused_ns:
+        panel_f = 64 if n <= 256 else 128
+        L, V = make_problem(n, kf, seed=n + kf)
+        t_fused, out_f = time_call(
+            lambda L, V: fused_k.chol_update_fused(
+                L, V, sigma=1, panel=panel_f, interpret=interpret
+            ), L, V, reps=2,
+        )
+        t_casc, out_c = time_call(
+            lambda L, V: kernel_ops.chol_update_pallas(
+                L, V, sigma=1, panel=panel_f, strategy="gemm",
+                block_w=panel_f, interpret=interpret
+            ), L, V, reps=2,
+        )
+        err_f = float(ref.modify_error(out_f, L, V, sigma=1))
+        lc_f = fused_k.launch_count(n, panel_f, method="fused")
+        lc_c = fused_k.launch_count(n, panel_f, method="pallas")
+        lc_2 = fused_k.launch_count(n, panel_f, method="pallas_2phase")
+        csv_rows.append(
+            (f"cholupdate/fused/n{n}/k{kf}", t_fused * 1e6,
+             f"err={err_f:.2e} launches=1")
+        )
+        csv_rows.append(
+            (f"cholupdate/fused_vs_cascade/n{n}/k{kf}", t_casc * 1e6,
+             f"speedup={t_casc / t_fused:.2f}x "
+             f"launches_cascade={lc_c} launches_2phase={lc_2} "
+             f"launch_reduction={lc_c}->{lc_f}")
+        )
+
+    # --- batched serving workload: B concurrent per-user updates -----------
+    Bsz, nb, kb, panel_b = (4, 128, 8, 32) if quick else (8, 256, 8, 64)
+    Ls, Vs = zip(*[make_problem(nb, kb, seed=500 + b) for b in range(Bsz)])
+    Lb, Vb = jnp.stack(Ls), jnp.stack(Vs)
+    t_bat, out_b = time_call(
+        lambda Lb, Vb: chol_update_batched(
+            Lb, Vb, sigma=1, method="fused", panel=panel_b, interpret=interpret
+        ), Lb, Vb, reps=2,
+    )
+
+    @jax.jit
+    def loop_singles(Lb, Vb):
+        return jnp.stack([
+            fused_k.chol_update_fused(
+                Lb[b], Vb[b], sigma=1, panel=panel_b, interpret=interpret
+            )
+            for b in range(Bsz)
+        ])
+
+    t_loop, _ = time_call(loop_singles, Lb, Vb, reps=2)
+    err_b = max(
+        float(ref.modify_error(out_b[b], Ls[b], Vs[b], sigma=1))
+        for b in range(Bsz)
+    )
+    csv_rows.append(
+        (f"cholupdate/batched_fused/B{Bsz}n{nb}k{kb}", t_bat * 1e6,
+         f"err={err_b:.2e} per_update_us={t_bat / Bsz * 1e6:.1f} "
+         f"vs_loop_of_singles={t_loop / t_bat:.2f}x")
     )
     return csv_rows

@@ -17,9 +17,9 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json, time
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 from repro.core import ref
 from repro.core.distributed import chol_update_sharded
+from repro.runtime.compat import make_mesh_compat
 
 out = []
 n, k, panel = %(n)d, 16, 64
@@ -29,7 +29,7 @@ V = rng.uniform(size=(n, k)).astype(np.float32)
 A = B.T @ B + np.eye(n, dtype=np.float32)
 L = jnp.array(np.linalg.cholesky(A).T); Vj = jnp.array(V)
 for shape, axes in [((1,), ("model",)), ((4,), ("model",)), ((8,), ("model",))]:
-    mesh = jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,)*len(shape))
+    mesh = make_mesh_compat(shape, axes)
     with mesh:
         fn = lambda: chol_update_sharded(L, Vj, sigma=1, mesh=mesh, axis="model", panel=panel)
         r = jax.block_until_ready(fn())

@@ -3,14 +3,18 @@
 Wall-clock in interpret mode is not TPU performance; what we report per
 kernel is (a) the paper error metric vs the oracle, (b) the BlockSpec VMEM
 working set (the quantity that must fit the 16 MiB v5e VMEM and determines
-the panel sizes used in the roofline), and (c) arithmetic intensity of the
-panel kernels — the paper's bandwidth-bound story vs the GEMM adaptation.
+the panel sizes used in the roofline), (c) arithmetic intensity of the
+panel kernels — the paper's bandwidth-bound story vs the GEMM adaptation —
+and (d) the launch count per up/down-date: the per-panel cascade's
+O(n/panel) dispatches vs the fused pipeline's single ``pallas_call``
+(DESIGN.md §5).
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core import blocked, ref
+from repro.kernels import fused as fused_k
 from repro.kernels import ops
 
 
@@ -21,6 +25,12 @@ def vmem_bytes_paper(P, k, bw, dtype_bytes=4):
 
 def vmem_bytes_gemm(P, k, bw, dtype_bytes=4):
     return ((P + k) * (P + k) + (P + k) * bw * 2) * dtype_bytes
+
+
+def vmem_bytes_fused(P, k, n, dtype_bytes=4):
+    # L tile (in+out) + the (k, n) V^T INPUT block (its own pallas buffer,
+    # constant index map) + the (k, n) V^T scratch + parked T, c, s scratch
+    return (2 * P * P + 2 * k * n + (P + k) ** 2 + 2 * P * k) * dtype_bytes
 
 
 def run(csv_rows, *, quick=False):
@@ -38,8 +48,23 @@ def run(csv_rows, *, quick=False):
         out = ops.chol_update_pallas(L, Vj, sigma=1, panel=panel,
                                      strategy=strat, block_w=bw, interpret=True)
         err = float(np.max(np.abs(np.asarray(out - L_ref))))
+        lc = fused_k.launch_count(n, panel, method="pallas")
         csv_rows.append((f"pallas/{strat}/n{n}k{k}", 0.0,
-                         f"maxdiff_vs_oracle={err:.2e}"))
+                         f"maxdiff_vs_oracle={err:.2e} launches={lc}"))
+    for strat in ("gemm", "paper"):
+        out = fused_k.chol_update_fused(L, Vj, sigma=1, panel=panel,
+                                        panel_apply=strat, interpret=True)
+        err = float(np.max(np.abs(np.asarray(out - L_ref))))
+        csv_rows.append((f"pallas/fused_{strat}/n{n}k{k}", 0.0,
+                         f"maxdiff_vs_oracle={err:.2e} launches=1"))
+    # launch-count scaling: the cascade grows O(n/panel); fused stays 1
+    for nn in (1024, 4096, 16384):
+        lc_c = fused_k.launch_count(nn, 256, method="pallas")
+        lc_2 = fused_k.launch_count(nn, 256, method="pallas_2phase")
+        csv_rows.append(
+            (f"pallas/launches/n{nn}P256", 0.0,
+             f"cascade={lc_c} two_phase={lc_2} fused=1")
+        )
     # VMEM working sets for the production tile choices (P=256, bw=512, k=16)
     for P, kk, bw2 in [(256, 16, 512), (128, 16, 1024), (256, 1, 512)]:
         vb_p = vmem_bytes_paper(P, kk, bw2)
@@ -51,5 +76,16 @@ def run(csv_rows, *, quick=False):
             (f"pallas/vmem/P{P}k{kk}bw{bw2}", 0.0,
              f"paper={vb_p/2**20:.2f}MiB gemm={vb_g/2**20:.2f}MiB "
              f"AI_paper={ai_paper:.1f} AI_gemm={ai_gemm:.1f}flops/B")
+        )
+    # fused working set incl. the whole-launch (k, n) V^T input + scratch —
+    # bounds the n the fusion can serve. Budget is 14 of the 16 MiB v5e
+    # VMEM: ~2 MiB headroom for Mosaic spills and the double-buffered L
+    # tiles the element-count model below does not include (DESIGN.md §5).
+    vmem_budget = 14 * 2**20
+    for P, kk, nn in [(256, 16, 4096), (256, 16, 16384), (128, 16, 65536)]:
+        vb_f = vmem_bytes_fused(P, kk, nn)
+        csv_rows.append(
+            (f"pallas/vmem_fused/P{P}k{kk}n{nn}", 0.0,
+             f"fused={vb_f/2**20:.2f}MiB fits_v5e={vb_f < vmem_budget}")
         )
     return csv_rows

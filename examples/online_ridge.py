@@ -7,50 +7,127 @@ each step UPDATES with the newest batch of rows and DOWNDATES the batch
 falling out of the window — never refactorizing. Compares against the exact
 windowed solve.
 
-Run:  PYTHONPATH=src python examples/online_ridge.py
+Two modes:
+
+* single  — one stream, the paper's original workload (serial reference path).
+* batched — a fleet of independent per-user streams advanced in lockstep via
+  ``chol_update_batched`` on the fused single-launch kernel (DESIGN.md §5):
+  one device dispatch updates every user's factor, the serving-shaped
+  workload the batched API exists for.
+
+Run:  PYTHONPATH=src python examples/online_ridge.py [--batched] [--users B]
 """
+import argparse
 import collections
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import chol_factor, chol_solve, chol_update
+from repro.core import chol_factor, chol_solve, chol_update, chol_update_batched
 
-rng = np.random.default_rng(0)
-d, batch, window_batches, steps = 64, 8, 4, 12
-lam = 1e-1
 
-true_w = rng.normal(size=(d,)).astype(np.float32)
-L = chol_factor(jnp.eye(d) * lam)  # factor of lambda*I
-xty = jnp.zeros((d,))
-window = collections.deque()
+def run_single(*, d=64, batch=8, window_batches=4, steps=12, lam=1e-1, seed=0):
+    rng = np.random.default_rng(seed)
+    true_w = rng.normal(size=(d,)).astype(np.float32)
+    L = chol_factor(jnp.eye(d) * lam)  # factor of lambda*I
+    xty = jnp.zeros((d,))
+    window = collections.deque()
 
-print(f"{'step':>4} {'err_vs_exact':>14} {'w_err':>10}")
-for t in range(steps):
-    X = rng.normal(size=(batch, d)).astype(np.float32)
-    y = X @ true_w + 0.1 * rng.normal(size=(batch,)).astype(np.float32)
-    Xj, yj = jnp.asarray(X), jnp.asarray(y)
+    print(f"{'step':>4} {'err_vs_exact':>14} {'w_err':>10}")
+    for t in range(steps):
+        X = rng.normal(size=(batch, d)).astype(np.float32)
+        y = X @ true_w + 0.1 * rng.normal(size=(batch,)).astype(np.float32)
+        Xj, yj = jnp.asarray(X), jnp.asarray(y)
 
-    # Rank-`batch` update with the new rows.
-    L = chol_update(L, Xj.T, sigma=1, method="reference")
-    xty = xty + Xj.T @ yj
-    window.append((Xj, yj))
+        # Rank-`batch` update with the new rows.
+        L = chol_update(L, Xj.T, sigma=1, method="reference")
+        xty = xty + Xj.T @ yj
+        window.append((Xj, yj))
 
-    # Slide: downdate the expiring batch (the paper's downdate in anger).
-    if len(window) > window_batches:
-        Xold, yold = window.popleft()
-        L = chol_update(L, Xold.T, sigma=-1, method="reference")
-        xty = xty - Xold.T @ yold
+        # Slide: downdate the expiring batch (the paper's downdate in anger).
+        if len(window) > window_batches:
+            Xold, yold = window.popleft()
+            L = chol_update(L, Xold.T, sigma=-1, method="reference")
+            xty = xty - Xold.T @ yold
 
-    w = chol_solve(L, xty)
+        w = chol_solve(L, xty)
 
-    # Exact windowed solution for comparison.
-    Xw = np.concatenate([np.asarray(x) for x, _ in window])
-    yw = np.concatenate([np.asarray(y) for _, y in window])
-    A_exact = lam * np.eye(d) + Xw.T @ Xw
-    w_exact = np.linalg.solve(A_exact, Xw.T @ yw)
-    err = float(np.max(np.abs(np.asarray(w) - w_exact)))
-    werr = float(np.linalg.norm(np.asarray(w) - true_w) / np.linalg.norm(true_w))
-    print(f"{t:4d} {err:14.3e} {werr:10.4f}")
+        # Exact windowed solution for comparison.
+        Xw = np.concatenate([np.asarray(x) for x, _ in window])
+        yw = np.concatenate([np.asarray(y) for _, y in window])
+        A_exact = lam * np.eye(d) + Xw.T @ Xw
+        w_exact = np.linalg.solve(A_exact, Xw.T @ yw)
+        err = float(np.max(np.abs(np.asarray(w) - w_exact)))
+        werr = float(np.linalg.norm(np.asarray(w) - true_w)
+                     / np.linalg.norm(true_w))
+        print(f"{t:4d} {err:14.3e} {werr:10.4f}")
 
-print("maintained factor tracks the exact sliding-window solution.")
+    print("maintained factor tracks the exact sliding-window solution.")
+
+
+def run_batched(*, users=4, d=64, batch=8, window_batches=4, steps=8,
+                lam=1e-1, panel=32, seed=0):
+    """A fleet of independent sliding-window ridge streams, one per user.
+
+    Every step issues exactly TWO batched device calls for the whole fleet
+    (one update, one downdate) instead of 2*users — the launch economics the
+    fused kernel brings to serving.
+    """
+    rng = np.random.default_rng(seed)
+    true_w = rng.normal(size=(users, d)).astype(np.float32)
+    L = jnp.broadcast_to(chol_factor(jnp.eye(d) * lam), (users, d, d))
+    xty = jnp.zeros((users, d))
+    window = collections.deque()
+    solve_all = jax.vmap(chol_solve)
+
+    print(f"fleet of {users} users, d={d}, rank-{batch} window slides")
+    print(f"{'step':>4} {'max_err_vs_exact':>18} {'mean_w_err':>12}")
+    for t in range(steps):
+        X = rng.normal(size=(users, batch, d)).astype(np.float32)
+        y = np.einsum("ubd,ud->ub", X, true_w) + 0.1 * rng.normal(
+            size=(users, batch)).astype(np.float32)
+        Xj, yj = jnp.asarray(X), jnp.asarray(y)
+
+        # One launch updates every user's factor (V is (B, d, batch)).
+        L = chol_update_batched(
+            L, jnp.swapaxes(Xj, 1, 2), sigma=1, method="fused", panel=panel
+        )
+        xty = xty + jnp.einsum("ubd,ub->ud", Xj, yj)
+        window.append((Xj, yj))
+
+        if len(window) > window_batches:
+            Xold, yold = window.popleft()
+            L = chol_update_batched(
+                L, jnp.swapaxes(Xold, 1, 2), sigma=-1, method="fused",
+                panel=panel,
+            )
+            xty = xty - jnp.einsum("ubd,ub->ud", Xold, yold)
+
+        w = solve_all(L, xty)
+
+        # Exact per-user windowed solutions.
+        errs, werrs = [], []
+        for u in range(users):
+            Xw = np.concatenate([np.asarray(x[u]) for x, _ in window])
+            yw = np.concatenate([np.asarray(yb[u]) for _, yb in window])
+            A_exact = lam * np.eye(d) + Xw.T @ Xw
+            w_exact = np.linalg.solve(A_exact, Xw.T @ yw)
+            errs.append(float(np.max(np.abs(np.asarray(w[u]) - w_exact))))
+            werrs.append(float(np.linalg.norm(np.asarray(w[u]) - true_w[u])
+                               / np.linalg.norm(true_w[u])))
+        print(f"{t:4d} {max(errs):18.3e} {np.mean(werrs):12.4f}")
+
+    print("every user's maintained factor tracks its exact windowed solution.")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batched", action="store_true",
+                    help="run the fleet-of-users batched mode")
+    ap.add_argument("--users", type=int, default=4)
+    args = ap.parse_args()
+    if args.batched:
+        run_batched(users=args.users)
+    else:
+        run_single()

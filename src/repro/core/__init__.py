@@ -5,7 +5,7 @@ panelled TPU-shaped implementation (paper §4 plus the GEMM adaptation),
 ``distributed`` the shard_map multi-device version, ``solve`` the consumer
 utilities. ``api.chol_update`` is the public entry point.
 """
-from repro.core.api import chol_downdate, chol_update
+from repro.core.api import chol_downdate, chol_update, chol_update_batched
 from repro.core.blocked import chol_update_blocked
 from repro.core.ref import chol_update_dense, chol_update_ref, modify_error
 from repro.core.solve import (
@@ -19,6 +19,7 @@ from repro.core.solve import (
 
 __all__ = [
     "chol_update",
+    "chol_update_batched",
     "chol_downdate",
     "chol_update_blocked",
     "chol_update_ref",

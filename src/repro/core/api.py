@@ -6,19 +6,27 @@
 * ``reference``   — serial oracle (O(k n^2), paper Algorithm 1).
 * ``paper``       — panelled, faithful element-wise panel apply (paper §4).
 * ``gemm``        — panelled, transform-matrix GEMM panel apply (TPU-native).
-* ``pallas``      — Pallas kernel, paper-style element-wise panel kernel.
-* ``pallas_gemm`` — Pallas kernel, MXU GEMM panel kernel.
+* ``pallas``      — Pallas kernel, paper-style element-wise panel kernel,
+                    one launch per panel (the paper's dispatch pattern).
+* ``pallas_gemm`` — Pallas kernel, MXU GEMM panel kernel, one launch/panel.
+* ``fused``       — single-launch pipelined Pallas kernel: the whole panel
+                    dependency chain in ONE ``pallas_call``, rotation state
+                    parked in VMEM scratch (DESIGN.md §5).
 * ``auto``        — heuristic: reference for tiny n, gemm otherwise.
+
+``chol_update_batched`` vmaps any of these over stacked ``(B, n, n)``
+factors — the serving workload of many concurrent per-user updates.
 """
 from __future__ import annotations
 
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import blocked, ref
 
-_METHODS = ("reference", "paper", "gemm", "pallas", "pallas_gemm", "auto")
+_METHODS = ("reference", "paper", "gemm", "pallas", "pallas_gemm", "fused", "auto")
 
 
 def chol_update(
@@ -56,6 +64,12 @@ def chol_update(
             L, V, sigma=sigma, panel=panel, strategy=method
         )
     # Pallas paths imported lazily so the pure-JAX core has no kernel deps.
+    if method == "fused":
+        from repro.kernels import fused as kernel_fused
+
+        return kernel_fused.chol_update_fused(
+            L, V, sigma=sigma, panel=panel, interpret=interpret
+        )
     from repro.kernels import ops as kernel_ops
 
     return kernel_ops.chol_update_pallas(
@@ -66,6 +80,48 @@ def chol_update(
         strategy="gemm" if method == "pallas_gemm" else "paper",
         interpret=interpret,
     )
+
+
+def chol_update_batched(
+    L,
+    V,
+    *,
+    sigma: int = 1,
+    method: str = "fused",
+    panel: int = 256,
+    interpret: Optional[bool] = None,
+):
+    """Batched rank-k up/down-date over stacked factors (one vmapped launch).
+
+    The serving workload: many concurrent per-user factors receive their own
+    modification in one dispatch (e.g. a fleet of online-ridge windows, one
+    per user). For the ``fused`` method vmap folds the batch into the kernel
+    grid, so B updates still cost a single device launch.
+
+    Args:
+      L: (B, n, n) stacked upper-triangular factors.
+      V: (B, n, k) — or (B, n), broadcast to rank 1 — stacked modifications.
+      sigma, method, panel, interpret: as in ``chol_update`` (shared across
+        the batch; per-element sigma would break the single-kernel grid).
+
+    Returns:
+      (B, n, n) stacked updated factors.
+    """
+    if L.ndim != 3:
+        raise ValueError(f"L must be (B, n, n), got shape {L.shape}")
+    if V.ndim == 2:
+        V = V[:, :, None]
+    if V.ndim != 3 or V.shape[0] != L.shape[0] or V.shape[1] != L.shape[1]:
+        raise ValueError(
+            f"V must be (B, n, k) matching L {L.shape}, got {V.shape}"
+        )
+
+    def one(l, v):
+        return chol_update(
+            l, v, sigma=sigma, method=method, panel=panel, interpret=interpret
+        )
+
+    return jax.vmap(one)(L, V)
 
 
 def chol_downdate(L, V, **kw):

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import blocked
+from repro.runtime.compat import shard_map as _shard_map
 
 AxisNames = Union[str, Sequence[str]]
 
@@ -93,7 +94,7 @@ def chol_update_sharded(
         _sharded_update, sigma=sigma, axes=axes, mesh=mesh, panel=panel,
         w_loc=w_loc, strategy=strategy,
     )
-    mapped = jax.shard_map(
+    mapped = _shard_map(
         fn,
         mesh=mesh,
         in_specs=(col_spec, col_spec),

@@ -1,3 +1,8 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# This paper's hot spot IS a custom-kernel cascade (§4.4):
+#   cholupdate.py — per-panel Pallas kernels (the paper's dispatch pattern)
+#   fused.py      — single-launch pipelined kernel (DESIGN.md §5)
+#   ops.py        — jit'd wrappers wiring the per-panel kernels to the driver

@@ -34,36 +34,93 @@ from jax.experimental import pallas as pl
 
 
 # ---------------------------------------------------------------------------
-# Faithful element-wise panel kernel (the paper's GPU kernel).
+# Value-level kernel math, shared by the per-panel kernels below and the
+# fused single-launch kernel (repro.kernels.fused). Hand-rolled with
+# fori_loop/dynamic_slice instead of calling repro.core.blocked's scan/.at[]
+# versions because Mosaic lowers the former reliably inside kernel bodies;
+# this is the ONE in-kernel copy of the hyperbolic recurrence.
 # ---------------------------------------------------------------------------
 
 
-def _paper_kernel(c_ref, s_ref, r_ref, vt_ref, r_out, vt_out, *, sigma: int, rows: int, k: int):
-    # Load the V tile once (paper step 1: V into registers) and keep it live
-    # across the whole row loop; write it back at the end (paper step 3).
-    vt = vt_ref[...]  # (k, bw)
-    c = c_ref[...]    # (rows, k) — the shared-memory (c, s) staging buffer
-    s = s_ref[...]
+def diag_recurrence(D, vtd, *, sigma: int, rows: int, k: int):
+    """Serial diagonal-block recurrence on values, emitting the transform T.
 
-    def row_body(i, vt):
-        t = r_ref[pl.dslice(i, 1), :]  # (1, bw): read one L row
+    Same math as ``repro.core.blocked.panel_diag(..., with_transform=True)``:
+    the stacked block [D; vtd] is augmented with an identity so the row sweep
+    also produces T with ``[R_new; vt_new] = T @ [R; vt]``.
+    Returns (D_new, c, s, T).
+    """
+    pk = rows + k
+    S = jnp.concatenate([D, vtd], axis=0)
+    S = jnp.concatenate([S, jnp.eye(pk, dtype=S.dtype)], axis=1)
 
-        def m_body(m, carry):
-            t, vt = carry
+    def row_body(i, carry):
+        def m_body(m, inner):
+            S, c_acc, s_acc = inner
+            row_i = jax.lax.dynamic_slice_in_dim(S, i, 1, axis=0)
+            row_v = jax.lax.dynamic_slice_in_dim(S, rows + m, 1, axis=0)
+            lii = jax.lax.dynamic_slice_in_dim(row_i, i, 1, axis=1)[0, 0]
+            vim = jax.lax.dynamic_slice_in_dim(row_v, i, 1, axis=1)[0, 0]
+            w = jnp.sqrt(lii * lii + sigma * vim * vim)
+            c = w / lii
+            s = vim / lii
+            row_i_new = (row_i + sigma * s * row_v) / c
+            row_v_new = c * row_v - s * row_i_new
+            S = jax.lax.dynamic_update_slice_in_dim(S, row_i_new, i, axis=0)
+            S = jax.lax.dynamic_update_slice_in_dim(S, row_v_new, rows + m, axis=0)
+            c_acc = jax.lax.dynamic_update_slice(c_acc, c[None, None], (i, m))
+            s_acc = jax.lax.dynamic_update_slice(s_acc, s[None, None], (i, m))
+            return S, c_acc, s_acc
+
+        return jax.lax.fori_loop(0, k, m_body, carry)
+
+    c0 = jnp.zeros((rows, k), dtype=S.dtype)
+    s0 = jnp.zeros((rows, k), dtype=S.dtype)
+    S, c_acc, s_acc = jax.lax.fori_loop(0, rows, row_body, (S, c0, s0))
+    return jnp.triu(S[:rows, :rows]), c_acc, s_acc, S[:, rows:]
+
+
+def apply_rotations(R, vt, c, s, *, sigma: int, rows: int, k: int):
+    """Element-wise rotation-chain panel apply on values (paper ``Apply``).
+
+    Streams the rows of R, chaining the k rotations per row; the V tile
+    stays live across the whole loop (the paper keeps V in registers).
+    Returns (R_new, vt_new).
+    """
+
+    def row_body(i, carry):
+        R, vt = carry
+        t = jax.lax.dynamic_slice_in_dim(R, i, 1, axis=0)  # one L row
+
+        def m_body(m, inner):
+            t, vt = inner
             c_im = jax.lax.dynamic_slice(c, (i, m), (1, 1))
             s_im = jax.lax.dynamic_slice(s, (i, m), (1, 1))
-            v_m = jax.lax.dynamic_slice_in_dim(vt, m, 1, axis=0)  # (1, bw)
+            v_m = jax.lax.dynamic_slice_in_dim(vt, m, 1, axis=0)
             t = (t + sigma * s_im * v_m) / c_im       # paper Apply, line 1
             v_m = c_im * v_m - s_im * t               # paper Apply, line 2
             vt = jax.lax.dynamic_update_slice_in_dim(vt, v_m, m, axis=0)
             return t, vt
 
         t, vt = jax.lax.fori_loop(0, k, m_body, (t, vt))
-        r_out[pl.dslice(i, 1), :] = t  # write the L row back
-        return vt
+        R = jax.lax.dynamic_update_slice_in_dim(R, t, i, axis=0)
+        return R, vt
 
-    vt = jax.lax.fori_loop(0, rows, row_body, vt)
-    vt_out[...] = vt
+    return jax.lax.fori_loop(0, rows, row_body, (R, vt))
+
+
+# ---------------------------------------------------------------------------
+# Faithful element-wise panel kernel (the paper's GPU kernel).
+# ---------------------------------------------------------------------------
+
+
+def _paper_kernel(c_ref, s_ref, r_ref, vt_ref, r_out, vt_out, *, sigma: int, rows: int, k: int):
+    R_new, vt_new = apply_rotations(
+        r_ref[...], vt_ref[...], c_ref[...], s_ref[...],
+        sigma=sigma, rows=rows, k=k,
+    )
+    r_out[...] = R_new
+    vt_out[...] = vt_new
 
 
 @functools.partial(
@@ -165,40 +222,13 @@ def panel_apply_gemm(R, vt, T, *, block_w: int = 512, interpret: bool = False):
 
 
 def _diag_kernel(d_ref, vtd_ref, d_out, c_out, s_out, t_out, *, sigma: int, rows: int, k: int):
-    pk = rows + k
-    # Stacked working set: [D; vt_diag | I_{P+k}] — (P+k, P + P+k), in VMEM.
-    S = jnp.concatenate([d_ref[...], vtd_ref[...]], axis=0)
-    S = jnp.concatenate([S, jnp.eye(pk, dtype=S.dtype)], axis=1)
-
-    def row_body(i, carry):
-        S, c_acc, s_acc = carry
-
-        def m_body(m, inner):
-            S, c_acc, s_acc = inner
-            row_i = jax.lax.dynamic_slice_in_dim(S, i, 1, axis=0)
-            row_v = jax.lax.dynamic_slice_in_dim(S, rows + m, 1, axis=0)
-            lii = jax.lax.dynamic_slice_in_dim(row_i, i, 1, axis=1)[0, 0]
-            vim = jax.lax.dynamic_slice_in_dim(row_v, i, 1, axis=1)[0, 0]
-            w = jnp.sqrt(lii * lii + sigma * vim * vim)
-            c = w / lii
-            s = vim / lii
-            row_i_new = (row_i + sigma * s * row_v) / c
-            row_v_new = c * row_v - s * row_i_new
-            S = jax.lax.dynamic_update_slice_in_dim(S, row_i_new, i, axis=0)
-            S = jax.lax.dynamic_update_slice_in_dim(S, row_v_new, rows + m, axis=0)
-            c_acc = jax.lax.dynamic_update_slice(c_acc, c[None, None], (i, m))
-            s_acc = jax.lax.dynamic_update_slice(s_acc, s[None, None], (i, m))
-            return S, c_acc, s_acc
-
-        return jax.lax.fori_loop(0, k, m_body, carry)
-
-    c0 = jnp.zeros((rows, k), dtype=S.dtype)
-    s0 = jnp.zeros((rows, k), dtype=S.dtype)
-    S, c_acc, s_acc = jax.lax.fori_loop(0, rows, row_body, (S, c0, s0))
-    d_out[...] = jnp.triu(S[:rows, :rows])
-    c_out[...] = c_acc
-    s_out[...] = s_acc
-    t_out[...] = S[:, rows:]
+    D_new, c, s, T = diag_recurrence(
+        d_ref[...], vtd_ref[...], sigma=sigma, rows=rows, k=k
+    )
+    d_out[...] = D_new
+    c_out[...] = c
+    s_out[...] = s
+    t_out[...] = T
 
 
 @functools.partial(jax.jit, static_argnames=("sigma", "interpret"))

@@ -1,0 +1,232 @@
+"""Single-launch fused rank-k Cholesky up/down-date (DESIGN.md §5).
+
+The paper's central implementation obstacle is that "a complex dependency
+pattern must be obeyed, requiring multiple kernels to be launched": diagonal
+block p must finish before off-diagonal panel p, which must finish before
+diagonal block p+1. The per-panel driver (``repro.kernels.ops``) reproduces
+that cost verbatim — one ``pallas_call`` per panel, O(n/panel) dispatches,
+with the rotation state ``(c, s)`` / the transform ``T`` and the running
+``V^T`` round-tripping through HBM (and Python) between launches.
+
+This module collapses the whole cascade into ONE ``pallas_call`` whose grid
+*is* the dependency chain. TPU grid steps execute sequentially (grid
+dimensions are "arbitrary", not "parallel", by default), so the chain
+
+    diag block 0 -> panel 0 -> diag block 1 -> panel 1 -> ...
+
+maps onto the row-major walk of a 2-D grid ``(p, j)``:
+
+* step ``(p, 0)``      — the serial diagonal phase on block ``p``: runs the
+  hyperbolic recurrence, writes the updated diagonal tile, and parks the
+  rotation coefficients ``(c, s)`` and the GEMM transform ``T`` in VMEM
+  scratch, where they stay for the rest of the row — never touching HBM.
+* step ``(p, j>0)``    — applies the parked transform to column tile
+  ``t = p + j`` of the off-diagonal panel (GEMM on the MXU by default, or
+  the paper's element-wise rotation chain with ``panel_apply='paper'``).
+
+The running ``V^T`` is the only state carried *across* rows ``p``; it lives
+in a ``(k, n)`` VMEM scratch buffer for the entire launch (loaded once at
+step (0, 0)), so the HBM traffic per panel is exactly one L-tile read + one
+L-tile write — the paper's O(n k) per-panel (c, s) upload and V round-trip
+disappear entirely.
+
+Correctness of the pipelining: L's row-panels are disjoint across ``p`` (step
+``(p, j)`` reads and writes only row-panel ``p``), and all cross-panel
+coupling flows through the VMEM-resident ``V^T``; therefore no grid step ever
+reads an HBM tile that an earlier step wrote, and Pallas's input prefetch
+(fetching step i+1's block during step i) can never observe stale data.
+
+Grid rectangularisation: the trailing width shrinks as ``p`` advances, so the
+rectangular ``(nP, nP)`` grid has ~nP²/2 no-op steps whose block index is
+clamped to the last valid tile (same index -> no refetch, no reflush). These
+are empty kernel invocations, not wasted HBM traffic; see DESIGN.md §5 for
+the measured cost and the scalar-prefetch follow-on that would remove them.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# The in-kernel hyperbolic recurrence and rotation-chain apply live in ONE
+# place, shared with the per-panel kernels (see the note in cholupdate.py).
+from repro.kernels.cholupdate import apply_rotations, diag_recurrence
+
+
+def _fused_kernel(
+    vt_in,
+    l_ref,
+    l_out,
+    vt_s,
+    t_s,
+    c_s,
+    s_s,
+    *,
+    sigma: int,
+    panel: int,
+    k: int,
+    n_tiles: int,
+    panel_apply: str,
+):
+    p = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((p == 0) & (j == 0))
+    def _load_vt():
+        # V^T enters VMEM exactly once, at the first grid step, and never
+        # returns to HBM: it is dead state once the factor is updated.
+        vt_s[...] = vt_in[...]
+
+    @pl.when(j == 0)
+    def _diag():
+        D = l_ref[...]
+        vtd = vt_s[:, pl.dslice(p * panel, panel)]
+        D_new, c, s, T = diag_recurrence(D, vtd, sigma=sigma, rows=panel, k=k)
+        l_out[...] = D_new
+        # Park the panel transform for the rest of this grid row.
+        c_s[...] = c
+        s_s[...] = s
+        t_s[...] = T
+        # The recurrence annihilates this V^T slab.
+        vt_s[:, pl.dslice(p * panel, panel)] = jnp.zeros_like(vtd)
+
+    t = p + j
+
+    @pl.when((j > 0) & (t < n_tiles))
+    def _apply():
+        R = l_ref[...]
+        vtt = vt_s[:, pl.dslice(t * panel, panel)]
+        if panel_apply == "gemm":
+            T = t_s[...]
+            t_rr, t_rv = T[:panel, :panel], T[:panel, panel:]
+            t_vr, t_vv = T[panel:, :panel], T[panel:, panel:]
+            acc = jnp.dot(t_rr, R, preferred_element_type=jnp.float32)
+            acc += jnp.dot(t_rv, vtt, preferred_element_type=jnp.float32)
+            accv = jnp.dot(t_vr, R, preferred_element_type=jnp.float32)
+            accv += jnp.dot(t_vv, vtt, preferred_element_type=jnp.float32)
+            R_new = acc.astype(l_out.dtype)
+            vt_new = accv.astype(vtt.dtype)
+        else:
+            R_new, vt_new = apply_rotations(
+                R, vtt, c_s[...], s_s[...], sigma=sigma, rows=panel, k=k
+            )
+        l_out[...] = R_new
+        vt_s[:, pl.dslice(t * panel, panel)] = vt_new
+
+
+@functools.partial(
+    jax.jit, static_argnames=("sigma", "panel", "panel_apply", "interpret")
+)
+def _fused_call(L, vt, *, sigma, panel, panel_apply, interpret):
+    n_pad = L.shape[0]
+    k = vt.shape[0]
+    n_tiles = n_pad // panel
+    pk = panel + k
+    last = n_tiles - 1
+
+    def l_index(p, j):
+        # Clamp no-op steps (p + j past the trailing edge) onto the last
+        # valid tile of the row: same block index -> the pipeline neither
+        # refetches nor reflushes, and the kernel body skips them.
+        return (p, jnp.minimum(p + j, last))
+
+    out = pl.pallas_call(
+        functools.partial(
+            _fused_kernel,
+            sigma=sigma,
+            panel=panel,
+            k=k,
+            n_tiles=n_tiles,
+            panel_apply=panel_apply,
+        ),
+        grid=(n_tiles, n_tiles),
+        in_specs=[
+            pl.BlockSpec((k, n_pad), lambda p, j: (0, 0)),  # V^T: loaded once
+            pl.BlockSpec((panel, panel), l_index),          # L tile
+        ],
+        out_specs=pl.BlockSpec((panel, panel), l_index),
+        out_shape=jax.ShapeDtypeStruct((n_pad, n_pad), L.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((k, n_pad), L.dtype),   # running V^T (whole launch)
+            pltpu.VMEM((pk, pk), L.dtype),     # transform T   (one grid row)
+            pltpu.VMEM((panel, k), L.dtype),   # rotations c   (one grid row)
+            pltpu.VMEM((panel, k), L.dtype),   # rotations s   (one grid row)
+        ],
+        interpret=interpret,
+    )(vt, L)
+    # Only the upper block-triangle is ever written; the strictly-lower tiles
+    # of the output buffer are untouched garbage by design.
+    return jnp.triu(out)
+
+
+def chol_update_fused(
+    L,
+    V,
+    *,
+    sigma: int = 1,
+    panel: int = 256,
+    panel_apply: str = "gemm",
+    interpret=None,
+):
+    """Rank-k up/down-date in a single fused ``pallas_call``.
+
+    Args:
+      L: (n, n) upper-triangular factor, ``A = L^T L``.
+      V: (n, k) or (n,) modification matrix.
+      sigma: +1 update, -1 downdate.
+      panel: row-panel (= grid tile) size.
+      panel_apply: 'gemm' (MXU transform GEMM, default) or 'paper' (the
+        paper's element-wise rotation chain, using the parked (c, s)).
+      interpret: force Pallas interpret mode (default: auto — True off-TPU).
+
+    Returns:
+      The updated upper-triangular factor, same shape/dtype as ``L``.
+    """
+    if sigma not in (1, -1):
+        raise ValueError(f"sigma must be +1 or -1, got {sigma}")
+    if panel_apply not in ("gemm", "paper"):
+        raise ValueError(f"panel_apply must be 'gemm' or 'paper', got {panel_apply!r}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    squeeze = V.ndim == 1
+    if squeeze:
+        V = V[:, None]
+    from repro.core import blocked  # local import: kernels must not cycle core
+
+    L_pad, V_pad, n = blocked._pad_to_panels(L, V, panel)
+    out = _fused_call(
+        L_pad,
+        V_pad.T,
+        sigma=sigma,
+        panel=panel,
+        panel_apply=panel_apply,
+        interpret=bool(interpret),
+    )
+    return out[:n, :n]
+
+
+def launch_count(n: int, panel: int, *, method: str) -> int:
+    """Device-kernel launches issued per up/down-date, by method.
+
+    The quantity the paper pays per panel and this module's reason to exist:
+
+    * ``fused``        — 1, always (the grid walks the dependency chain).
+    * ``pallas``/``pallas_gemm`` — one panel-apply launch per panel that has a
+      trailing block, i.e. ``n_panels - 1`` (0 for a single-panel problem:
+      the diagonal phase runs as inlined jnp inside the same jit, so it adds
+      traced ops, not launches).
+    * ``pallas_2phase`` — the paper's own accounting: a diagonal kernel AND a
+      panel kernel per panel (what ``diag_block`` + ``panel_apply_*`` would
+      issue if both phases were separate device kernels).
+    """
+    n_panels = -(-n // panel)
+    if method == "fused":
+        return 1
+    if method in ("pallas", "pallas_gemm"):
+        return n_panels - 1
+    if method == "pallas_2phase":
+        return n_panels + (n_panels - 1)
+    raise ValueError(f"unknown method {method!r}")

@@ -46,6 +46,23 @@ def _dims(s: str) -> List[int]:
     return [int(d) for d in s.split(",") if d]
 
 
+_NAME_REF = re.compile(r"%([\w\.\-]+)")
+
+
+def _operand_names(s: str) -> List[str]:
+    """Bare instruction names from an HLO operand list.
+
+    Scheduled HLO prints typed operands (``f32[8,16]{1,0} %dot.0``) whose
+    shapes contain commas, so naive comma-splitting yields shape fragments.
+    Prefer the ``%name`` sigil references; fall back to comma tokens for
+    sigil-free dumps.
+    """
+    names = _NAME_REF.findall(s)
+    if names:
+        return names
+    return [tok.strip().split()[-1] for tok in s.split(",") if tok.strip()]
+
+
 def _nbytes(dtype: str, dims: List[int]) -> float:
     b = _DTYPE_BYTES.get(dtype, 0)
     n = 1
@@ -103,8 +120,8 @@ def _parse_comp(lines: List[str]) -> CompStats:
             ops = _OPERANDS.search(line[line.index(" dot(") :])
             contract = 1
             if ops:
-                first = ops.group(1).split(",")[0].strip().lstrip("%")
-                lhs = shapes.get(first)
+                names = _operand_names(ops.group(1))
+                lhs = shapes.get(names[0]) if names else None
                 ctr = _CONTRACT.search(line)
                 if lhs and ctr:
                     for i in _dims(ctr.group(1)):
@@ -139,9 +156,7 @@ def _parse_comp(lines: List[str]) -> CompStats:
         if "compare(" in line and "direction=LT" in line:
             ops = _OPERANDS.search(line[line.index("compare(") :])
             if ops:
-                st.has_lt_compare_with.extend(
-                    o.strip().lstrip("%") for o in ops.group(1).split(",")
-                )
+                st.has_lt_compare_with.extend(_operand_names(ops.group(1)))
             m = re.search(r"constant\((\d+)\)", line)
             if m:
                 st.constants[f"__inline_{len(st.constants)}"] = int(m.group(1))

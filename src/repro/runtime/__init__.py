@@ -1,7 +1,21 @@
+from repro.runtime.compat import (
+    AXIS_TYPE_AUTO,
+    HAS_AXIS_TYPE,
+    make_mesh_compat,
+    mesh_axis_types_kwargs,
+)
 from repro.runtime.fault_tolerance import (
     ResilientLoop,
     StragglerMonitor,
     elastic_reshard,
 )
 
-__all__ = ["ResilientLoop", "StragglerMonitor", "elastic_reshard"]
+__all__ = [
+    "ResilientLoop",
+    "StragglerMonitor",
+    "elastic_reshard",
+    "AXIS_TYPE_AUTO",
+    "HAS_AXIS_TYPE",
+    "make_mesh_compat",
+    "mesh_axis_types_kwargs",
+]

@@ -1,0 +1,63 @@
+"""JAX version-compatibility helpers (policy: DESIGN.md §6).
+
+The repo tracks a moving JAX API surface. ``jax.sharding.AxisType`` (and the
+matching ``axis_types=`` kwarg of ``jax.make_mesh``) exist only in newer JAX
+releases; the pinned container ships JAX 0.4.37, which has neither. Policy:
+
+* **feature-detect, never version-parse** — probe the attribute at import
+  time instead of comparing version strings, so pre-release and vendor
+  builds behave correctly;
+* **degrade to the old default** — on old JAX a mesh without axis types is
+  exactly what ``AxisType.Auto`` means on new JAX, so the fallback is
+  semantics-preserving, not a stub;
+* **one choke point** — every mesh construction in the repo (production
+  meshes, tests' virtual-device meshes, elastic restarts) goes through
+  ``make_mesh_compat`` so the probe lives in exactly one place.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+try:  # JAX >= 0.5: explicit/auto sharding axis types exist.
+    from jax.sharding import AxisType as _AxisType
+
+    HAS_AXIS_TYPE = True
+except ImportError:  # JAX <= 0.4.x: implicit (auto) sharding only.
+    _AxisType = None
+    HAS_AXIS_TYPE = False
+
+#: ``jax.sharding.AxisType.Auto`` where it exists, else None.
+AXIS_TYPE_AUTO = _AxisType.Auto if HAS_AXIS_TYPE else None
+
+# ``shard_map`` moved to the top-level jax namespace after 0.4.x; the pinned
+# container only has the jax.experimental spelling.
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # JAX <= 0.4.x
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def mesh_axis_types_kwargs(n_axes: int) -> dict:
+    """kwargs marking all ``n_axes`` mesh axes as Auto, where supported.
+
+    Returns ``{}`` on JAX versions without ``AxisType`` — implicit sharding
+    is the only (and therefore the default) behaviour there.
+    """
+    if HAS_AXIS_TYPE:
+        return {"axis_types": (_AxisType.Auto,) * n_axes}
+    return {}
+
+
+def make_mesh_compat(
+    shape: Sequence[int],
+    axes: Sequence[str],
+    *,
+    devices: Optional[Sequence] = None,
+):
+    """``jax.make_mesh`` with Auto axis types on JAX versions that have them."""
+    kwargs = mesh_axis_types_kwargs(len(tuple(axes)))
+    if devices is not None:
+        kwargs["devices"] = devices
+    return jax.make_mesh(tuple(shape), tuple(axes), **kwargs)

@@ -1,0 +1,49 @@
+"""Optional-import shim for ``hypothesis`` (property-based tests).
+
+The tier-1 suite must collect and run whether or not ``hypothesis`` is
+installed (it is pinned in ``requirements-dev.txt`` but absent from the bare
+runtime image). When it is available this module re-exports the real
+``given`` / ``settings`` / ``strategies``; when it is not, the decorators
+degrade into a zero-argument pytest skip with a clear marker, so the
+property-based tests show up as skipped instead of killing collection.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+    _SKIP_REASON = (
+        "hypothesis not installed — property-based test skipped "
+        "(pip install -r requirements-dev.txt)"
+    )
+
+    def given(*_args, **_kwargs):
+        def decorate(fn):
+            # Plain zero-arg stand-in (not functools.wraps: pytest follows
+            # __wrapped__ and would demand fixtures for the strategy params).
+            def shim():
+                pytest.skip(_SKIP_REASON)
+
+            shim.__name__ = fn.__name__
+            shim.__doc__ = fn.__doc__
+            shim.pytestmark = list(getattr(fn, "pytestmark", []))
+            return shim
+
+        return decorate
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _StrategyStub:
+        """Accepts any strategy constructor call and returns a placeholder."""
+
+        def __getattr__(self, name):
+            def strategy(*_args, **_kwargs):
+                return None
+
+            return strategy
+
+    st = _StrategyStub()

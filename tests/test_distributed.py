@@ -31,10 +31,10 @@ def run_in_devices(code: str, n_devices: int = 8, timeout: int = 600):
 
 PREAMBLE = """
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 from repro.core import ref
 from repro.core.distributed import chol_update_sharded
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+from repro.runtime.compat import make_mesh_compat
+mesh = make_mesh_compat((2, 4), ("data", "model"))
 rng = np.random.default_rng(0)
 n, k = 256, 16
 B = rng.uniform(size=(n, n)).astype(np.float32)

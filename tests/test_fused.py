@@ -1,0 +1,137 @@
+"""Fused single-launch kernel: parity vs the serial oracle + batched API.
+
+Coverage demanded by the fusion design (DESIGN.md §5): sigma = ±1, n not a
+multiple of the panel size, rank k in {1, 4, 16}, both in-kernel panel-apply
+strategies, and the vmapped batched entry point against a Python loop of
+single updates.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import chol_update, chol_update_batched, ref
+from repro.kernels import fused as F
+
+from tests.test_core_cholupdate import make_problem, tol_for
+
+
+def _downdatable(L, V):
+    A2 = L.T @ L + V @ V.T
+    return jnp.linalg.cholesky(A2).T
+
+
+@pytest.mark.parametrize("sigma", [1, -1])
+@pytest.mark.parametrize("k", [1, 4, 16])
+@pytest.mark.parametrize("n,panel", [(64, 16), (96, 32), (129, 64)])
+def test_fused_matches_reference(n, panel, k, sigma):
+    L, V = make_problem(n, k, seed=n + 3 * k)
+    if sigma == -1:
+        L = _downdatable(L, V)
+    L_ref = ref.chol_update_ref(L, V, sigma=sigma)
+    L_f = F.chol_update_fused(L, V, sigma=sigma, panel=panel, interpret=True)
+    np.testing.assert_allclose(L_f, L_ref, atol=tol_for(jnp.float32, n))
+    # factor structure survives the fused path (incl. the padded tail)
+    assert float(jnp.max(jnp.abs(jnp.tril(L_f, -1)))) == 0.0
+
+
+@pytest.mark.parametrize("panel_apply", ["gemm", "paper"])
+def test_fused_panel_apply_strategies_agree(panel_apply):
+    n, k, panel = 128, 8, 32
+    L, V = make_problem(n, k, seed=17)
+    L_ref = ref.chol_update_ref(L, V, sigma=1)
+    L_f = F.chol_update_fused(
+        L, V, sigma=1, panel=panel, panel_apply=panel_apply, interpret=True
+    )
+    np.testing.assert_allclose(L_f, L_ref, atol=tol_for(jnp.float32, n))
+
+
+def test_fused_ragged_n_and_rank1_vector():
+    # n=100 with panel=32 exercises the identity-padded tail; a (n,) vector
+    # must behave exactly like its (n, 1) reshape.
+    n, panel = 100, 32
+    L, V = make_problem(n, 1, seed=23)
+    a = F.chol_update_fused(L, V[:, 0], sigma=1, panel=panel, interpret=True)
+    b = F.chol_update_fused(L, V, sigma=1, panel=panel, interpret=True)
+    np.testing.assert_allclose(a, b, atol=0)
+    np.testing.assert_allclose(
+        a, ref.chol_update_ref(L, V, sigma=1), atol=tol_for(jnp.float32, n)
+    )
+
+
+def test_fused_via_api_and_validation():
+    n, k, panel = 96, 4, 32
+    L, V = make_problem(n, k, seed=31)
+    L_api = chol_update(L, V, sigma=1, method="fused", panel=panel, interpret=True)
+    L_ref = ref.chol_update_ref(L, V, sigma=1)
+    np.testing.assert_allclose(L_api, L_ref, atol=tol_for(jnp.float32, n))
+    with pytest.raises(ValueError):
+        F.chol_update_fused(L, V, sigma=2, interpret=True)
+    with pytest.raises(ValueError):
+        F.chol_update_fused(L, V, panel_apply="nope", interpret=True)
+
+
+def test_fused_update_downdate_roundtrip():
+    n, k, panel = 96, 5, 32
+    L, V = make_problem(n, k, seed=41)
+    L_up = F.chol_update_fused(L, V, sigma=1, panel=panel, interpret=True)
+    L_back = F.chol_update_fused(L_up, V, sigma=-1, panel=panel, interpret=True)
+    np.testing.assert_allclose(L_back, L, atol=tol_for(jnp.float32, n))
+    # paper's own acceptance metric
+    assert float(ref.modify_error(L_up, L, V, sigma=1)) < 1e-2
+
+
+@pytest.mark.parametrize("method", ["fused", "gemm", "reference"])
+def test_batched_matches_loop_of_singles(method):
+    B, n, k, panel = 4, 80, 4, 32
+    Ls, Vs = [], []
+    for b in range(B):
+        L, V = make_problem(n, k, seed=100 + b)
+        Ls.append(L)
+        Vs.append(V)
+    Lb = jnp.stack(Ls)
+    Vb = jnp.stack(Vs)
+    out = chol_update_batched(
+        Lb, Vb, sigma=1, method=method, panel=panel, interpret=True
+    )
+    assert out.shape == (B, n, n)
+    for b in range(B):
+        single = chol_update(
+            Ls[b], Vs[b], sigma=1, method=method, panel=panel, interpret=True
+        )
+        np.testing.assert_allclose(out[b], single, atol=tol_for(jnp.float32, n))
+
+
+def test_batched_rank1_2d_input_and_validation():
+    B, n = 3, 48
+    Ls, Vs = [], []
+    for b in range(B):
+        L, V = make_problem(n, 1, seed=200 + b)
+        Ls.append(L)
+        Vs.append(V[:, 0])
+    Lb, Vb = jnp.stack(Ls), jnp.stack(Vs)  # V is (B, n)
+    out = chol_update_batched(Lb, Vb, sigma=1, method="fused", panel=16,
+                              interpret=True)
+    for b in range(B):
+        np.testing.assert_allclose(
+            out[b],
+            ref.chol_update_ref(Ls[b], Vs[b], sigma=1),
+            atol=tol_for(jnp.float32, n),
+        )
+    with pytest.raises(ValueError):
+        chol_update_batched(Ls[0], Vs[0])  # unbatched input
+    with pytest.raises(ValueError):
+        chol_update_batched(Lb, Vb[:, : n // 2])  # n mismatch
+
+
+def test_launch_count_accounting():
+    # The tentpole claim, as arithmetic: one launch regardless of n/panel.
+    assert F.launch_count(4096, 256, method="fused") == 1
+    assert F.launch_count(4096, 256, method="pallas") == 15
+    assert F.launch_count(4096, 256, method="pallas_2phase") == 31
+    assert F.launch_count(100, 256, method="fused") == 1
+    # single-panel problem: no trailing block, so the cascade launches none
+    assert F.launch_count(100, 256, method="pallas") == 0
+    assert F.launch_count(100, 256, method="pallas_2phase") == 1
+    with pytest.raises(ValueError):
+        F.launch_count(4096, 256, method="nope")

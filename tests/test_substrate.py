@@ -114,16 +114,16 @@ def test_elastic_reshard_across_meshes(tmp_path):
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+        from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.checkpoint import save, restore
-        from repro.runtime import elastic_reshard
+        from repro.runtime import elastic_reshard, make_mesh_compat
         tmp = %r
-        mesh1 = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+        mesh1 = make_mesh_compat((2, 4), ("data", "model"))
         w = jax.device_put(jnp.arange(32, dtype=jnp.float32).reshape(4, 8),
                            NamedSharding(mesh1, P("data", "model")))
         save(tmp, 1, {"w": w})
         # "lost half the pod": restore onto a 4-device mesh
-        mesh2 = jax.make_mesh((1, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+        mesh2 = make_mesh_compat((1, 4), ("data", "model"))
         like = {"w": jnp.zeros((4, 8), jnp.float32)}
         sh = {"w": NamedSharding(mesh2, P("data", "model"))}
         out = restore(tmp, 1, like, shardings=sh)
