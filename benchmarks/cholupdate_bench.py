@@ -4,16 +4,20 @@ The paper's experimental procedure (§5): B, V ~ U[0,1]^{n x n}, n x k;
 update test A = B^T B + I; downdate test A = B^T B + I + V V^T; error
 metric max_ij |A~ - L~^T L~|. The paper compares LINPACK dchud (CPU, serial
 row sweeps) against the panelled GPU kernel. The CPU-container analogue
-benchmarked here:
+benchmarked here drives everything through the ``CholFactor`` object API
+(so the numbers include the production dispatch path: registry resolution +
+the Murray custom-derivative wrapper):
 
 * ``reference``   — serial hyperbolic sweeps (the dchud role),
 * ``paper``       — panelled, element-wise panel apply (the GPU kernel's
                     algorithm, bandwidth-bound),
 * ``gemm``        — panelled, transform-GEMM panel apply (the TPU-native
                     adaptation; BLAS plays the MXU role on this host),
-* ``fused``       — the single-launch pipelined Pallas kernel (DESIGN.md §5),
-                    timed against the per-panel kernel cascade with the
-                    launch-count delta recorded alongside wall-clock.
+* ``fused``       — the single-launch pipelined Pallas kernel (DESIGN.md
+                    §5), timed against the per-panel kernel cascade with
+                    the launch-count delta recorded alongside wall-clock,
+                    plus the 1-D indexed grid vs the clamped rectangular
+                    grid (the grid-squash satellite).
 
 Derived columns reproduce the paper's claims: the n^2 scaling exponent, the
 panelled-vs-serial speedup and its crossover n, rank-16-vs-16x-rank-1
@@ -28,8 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import blocked, ref
-from repro.core.api import chol_update, chol_update_batched
+from repro.core import CholFactor, ref
 from repro.kernels import fused as fused_k
 from repro.kernels import ops as kernel_ops
 
@@ -58,17 +61,22 @@ def _reps_for(n):
     return 1 if n >= 2048 else 3
 
 
+def _factor_update(backend, *, panel=256, interpret=None):
+    """Object-API update closure: the path every production consumer runs."""
+
+    def fn(L, V, sigma):
+        f = CholFactor.from_factor(L, panel=panel, backend=backend,
+                                   interpret=interpret)
+        return (f.update(V) if sigma == 1 else f.downdate(V)).data
+
+    return fn
+
+
 def run(csv_rows, *, ns=(512, 1024, 2048, 4096), ks=(16, 1), quick=False):
     if quick:
         ns = (256, 512)
     methods = {
-        "reference": lambda L, V, sigma: ref.chol_update_ref(L, V, sigma=sigma),
-        "paper": lambda L, V, sigma: blocked.chol_update_blocked(
-            L, V, sigma=sigma, panel=256, strategy="paper"
-        ),
-        "gemm": lambda L, V, sigma: blocked.chol_update_blocked(
-            L, V, sigma=sigma, panel=256, strategy="gemm"
-        ),
+        name: _factor_update(name) for name in ("reference", "paper", "gemm")
     }
     times = {}
     for k in ks:
@@ -86,8 +94,7 @@ def run(csv_rows, *, ns=(512, 1024, 2048, 4096), ks=(16, 1), quick=False):
                 )
             # downdate error parity (paper fig 2/3 bottom panels)
             L2, V2 = make_problem(n, k, seed=n + k, downdate=True)
-            out = blocked.chol_update_blocked(L2, V2, sigma=-1, panel=256,
-                                              strategy="gemm")
+            out = methods["gemm"](L2, V2, -1)
             errd = float(ref.modify_error(out, L2, V2, sigma=-1))
             csv_rows.append(
                 (f"cholupdate/gemm_downdate/n{n}/k{k}", 0.0, f"err={errd:.2e}")
@@ -114,18 +121,15 @@ def run(csv_rows, *, ns=(512, 1024, 2048, 4096), ks=(16, 1), quick=False):
     # Derived: rank-16 batching vs 16 sequential rank-1 (paper's k>1 motive)
     n = min(ns[-1], 1024)
     L, V = make_problem(n, 16, seed=5)
-    t16, _ = time_call(
-        lambda L, V: blocked.chol_update_blocked(L, V, sigma=1, panel=256,
-                                                 strategy="gemm"), L, V,
-        reps=2,
-    )
+    gemm_up = _factor_update("gemm")
+    t16, _ = time_call(lambda L, V: gemm_up(L, V, 1), L, V, reps=2)
 
     @jax.jit
     def seq_rank1(L, V):
+        f = CholFactor.from_factor(L, panel=256, backend="gemm")
         for m in range(16):
-            L = blocked.chol_update_blocked(L, V[:, m], sigma=1, panel=256,
-                                            strategy="gemm")
-        return L
+            f = f.update(V[:, m : m + 1])
+        return f.data
 
     tseq, _ = time_call(seq_rank1, L, V, reps=2)
     csv_rows.append(
@@ -143,10 +147,9 @@ def run(csv_rows, *, ns=(512, 1024, 2048, 4096), ks=(16, 1), quick=False):
     for n in fused_ns:
         panel_f = 64 if n <= 256 else 128
         L, V = make_problem(n, kf, seed=n + kf)
+        fused_up = _factor_update("fused", panel=panel_f, interpret=interpret)
         t_fused, out_f = time_call(
-            lambda L, V: fused_k.chol_update_fused(
-                L, V, sigma=1, panel=panel_f, interpret=interpret
-            ), L, V, reps=2,
+            lambda L, V: fused_up(L, V, 1), L, V, reps=2,
         )
         t_casc, out_c = time_call(
             lambda L, V: kernel_ops.chol_update_pallas(
@@ -154,10 +157,27 @@ def run(csv_rows, *, ns=(512, 1024, 2048, 4096), ks=(16, 1), quick=False):
                 block_w=panel_f, interpret=interpret
             ), L, V, reps=2,
         )
+        # grid-squash satellite: 1-D indexed grid vs clamped rectangular —
+        # both timed through the SAME direct kernel entry point (no object-
+        # API dispatch on either side) so the ratio isolates the grid shape.
+        t_idx, _ = time_call(
+            lambda L, V: fused_k.chol_update_fused(
+                L, V, sigma=1, panel=panel_f, grid_mode="indexed",
+                interpret=interpret
+            ), L, V, reps=2,
+        )
+        t_rect, _ = time_call(
+            lambda L, V: fused_k.chol_update_fused(
+                L, V, sigma=1, panel=panel_f, grid_mode="rect",
+                interpret=interpret
+            ), L, V, reps=2,
+        )
         err_f = float(ref.modify_error(out_f, L, V, sigma=1))
         lc_f = fused_k.launch_count(n, panel_f, method="fused")
         lc_c = fused_k.launch_count(n, panel_f, method="pallas")
         lc_2 = fused_k.launch_count(n, panel_f, method="pallas_2phase")
+        gs_i = fused_k.grid_steps(n, panel_f, grid_mode="indexed")
+        gs_r = fused_k.grid_steps(n, panel_f, grid_mode="rect")
         csv_rows.append(
             (f"cholupdate/fused/n{n}/k{kf}", t_fused * 1e6,
              f"err={err_f:.2e} launches=1")
@@ -168,16 +188,23 @@ def run(csv_rows, *, ns=(512, 1024, 2048, 4096), ks=(16, 1), quick=False):
              f"launches_cascade={lc_c} launches_2phase={lc_2} "
              f"launch_reduction={lc_c}->{lc_f}")
         )
+        csv_rows.append(
+            (f"cholupdate/fused_grid_squash/n{n}/k{kf}", t_rect * 1e6,
+             f"grid_steps={gs_r}->{gs_i} "
+             f"rect_vs_indexed={t_rect / t_idx:.2f}x")
+        )
 
     # --- batched serving workload: B concurrent per-user updates -----------
     Bsz, nb, kb, panel_b = (4, 128, 8, 32) if quick else (8, 256, 8, 64)
     Ls, Vs = zip(*[make_problem(nb, kb, seed=500 + b) for b in range(Bsz)])
     Lb, Vb = jnp.stack(Ls), jnp.stack(Vs)
-    t_bat, out_b = time_call(
-        lambda Lb, Vb: chol_update_batched(
-            Lb, Vb, sigma=1, method="fused", panel=panel_b, interpret=interpret
-        ), Lb, Vb, reps=2,
-    )
+
+    def batched_update(Lb, Vb):
+        f = CholFactor.from_factor(Lb, panel=panel_b, backend="fused",
+                                   interpret=interpret)
+        return f.update(Vb).data
+
+    t_bat, out_b = time_call(batched_update, Lb, Vb, reps=2)
 
     @jax.jit
     def loop_singles(Lb, Vb):

@@ -1,7 +1,10 @@
-"""Distributed rank-k update scaling (8 virtual devices) + optimizer bench.
+"""Distributed rank-k update scaling (8 virtual devices) + launch accounting.
 
-Subprocess with forced device count so the main bench process keeps its
-single-device config.
+Benchmarks both sharded strategies: the distributed fused composition (one
+Pallas launch per shard per update, DESIGN.md §7) and the per-panel GEMM
+driver, with the launch-count instrumentation asserting the one-launch
+claim. Subprocess with forced device count so the main bench process keeps
+its single-device config.
 """
 from __future__ import annotations
 
@@ -19,6 +22,7 @@ import json, time
 import jax, jax.numpy as jnp, numpy as np
 from repro.core import ref
 from repro.core.distributed import chol_update_sharded
+from repro.kernels import sharded as sharded_k
 from repro.runtime.compat import make_mesh_compat
 
 out = []
@@ -28,17 +32,22 @@ B = rng.uniform(size=(n, n)).astype(np.float32)
 V = rng.uniform(size=(n, k)).astype(np.float32)
 A = B.T @ B + np.eye(n, dtype=np.float32)
 L = jnp.array(np.linalg.cholesky(A).T); Vj = jnp.array(V)
-for shape, axes in [((1,), ("model",)), ((4,), ("model",)), ((8,), ("model",))]:
-    mesh = make_mesh_compat(shape, axes)
-    with mesh:
-        fn = lambda: chol_update_sharded(L, Vj, sigma=1, mesh=mesh, axis="model", panel=panel)
-        r = jax.block_until_ready(fn())
-        t0 = time.perf_counter()
-        for _ in range(3):
+for strategy in ("fused", "gemm"):
+    for shape, axes in [((1,), ("model",)), ((4,), ("model",)), ((8,), ("model",))]:
+        mesh = make_mesh_compat(shape, axes)
+        before = sharded_k.launches_traced()
+        with mesh:
+            fn = lambda: chol_update_sharded(L, Vj, sigma=1, mesh=mesh, axis="model", panel=panel, strategy=strategy)
             r = jax.block_until_ready(fn())
-        dt = (time.perf_counter() - t0) / 3
-    err = float(jnp.max(jnp.abs(r - ref.chol_update_ref(L, Vj, sigma=1))))
-    out.append({"devices": shape[0], "us": dt * 1e6, "err": err})
+            traced = sharded_k.launches_traced() - before
+            t0 = time.perf_counter()
+            for _ in range(3):
+                r = jax.block_until_ready(fn())
+            dt = (time.perf_counter() - t0) / 3
+        err = float(jnp.max(jnp.abs(r - ref.chol_update_ref(L, Vj, sigma=1))))
+        out.append({"strategy": strategy, "devices": shape[0], "us": dt * 1e6,
+                    "err": err, "panel": panel, "launches_per_shard": traced,
+                    "launches_expected": sharded_k.launch_count_sharded(n, panel, strategy=strategy)})
 print(json.dumps(out))
 """
 
@@ -57,10 +66,14 @@ def run(csv_rows, *, quick=False):
         csv_rows.append(("distributed/error", 0.0, res.stderr[-200:]))
         return csv_rows
     rows = json.loads(res.stdout.strip().splitlines()[-1])
-    base = rows[0]["us"]
+    base = {r["strategy"]: r["us"] for r in rows if r["devices"] == 1}
     for r in rows:
+        s = r["strategy"]
         csv_rows.append(
-            (f"distributed/cholupdate/n{n}/dev{r['devices']}", r["us"],
-             f"err={r['err']:.2e} speedup_vs_1dev={base / r['us']:.2f}x")
+            (f"distributed/cholupdate_{s}/n{n}/dev{r['devices']}", r["us"],
+             f"err={r['err']:.2e} speedup_vs_1dev={base[s] / r['us']:.2f}x "
+             f"launches_per_shard={r['launches_per_shard']} "
+             f"expected={r['launches_expected']} "
+             f"(per-panel driver analogue: {n // r['panel']})")
         )
     return csv_rows

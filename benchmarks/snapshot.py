@@ -1,0 +1,92 @@
+"""Append-only benchmark snapshots: the repo's perf trajectory.
+
+``scripts/bench.sh`` runs the benchmark suites and appends ONE json record
+(line-delimited) to ``benchmarks/results/BENCH_cholupdate.json``:
+
+    {"ts": ..., "commit": ..., "backend": ..., "quick": ...,
+     "rows": [{"name": ..., "us": ..., "derived": ...}, ...]}
+
+Every future PR that touches a hot path runs the same script; the file then
+holds the before/after pair (and the whole history), so regressions are a
+``jq`` query instead of archaeology. Interpret-mode wall-clock off-TPU is
+dispatch-bound, not kernel performance — compare like against like via the
+recorded ``backend`` field.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import time
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results"
+SNAPSHOT = RESULTS / "BENCH_cholupdate.json"
+
+
+def _git_commit() -> str:
+    repo = Path(__file__).resolve().parent.parent
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10, cwd=repo,
+        ).stdout.strip() or "unknown"
+        # A snapshot from uncommitted code must not masquerade as HEAD's —
+        # the trajectory file is only comparable when rows attribute truly.
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"],
+            capture_output=True, text=True, timeout=10, cwd=repo,
+        ).stdout.strip()
+        return f"{sha}-dirty" if dirty else sha
+    except Exception:
+        return "unknown"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (default: quick)")
+    ap.add_argument("--only", type=str, default="cholupdate,kernels",
+                    help="comma-separated suite subset (see benchmarks.run)")
+    args = ap.parse_args()
+
+    import jax
+
+    from benchmarks import (
+        cholupdate_bench,
+        distributed_bench,
+        kernel_bench,
+        optimizer_bench,
+    )
+
+    suites = {
+        "cholupdate": cholupdate_bench.run,
+        "kernels": kernel_bench.run,
+        "distributed": distributed_bench.run,
+        "optimizer": optimizer_bench.run,
+    }
+    rows = []
+    for name in args.only.split(","):
+        suites[name](rows, quick=not args.full)
+
+    record = {
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "commit": _git_commit(),
+        "backend": jax.default_backend(),
+        "quick": not args.full,
+        "suites": args.only,
+        "rows": [
+            {"name": n, "us": round(us, 1), "derived": derived}
+            for n, us, derived in rows
+        ],
+    }
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    with SNAPSHOT.open("a") as fh:
+        fh.write(json.dumps(record) + "\n")
+    print(f"appended {len(rows)} rows to {SNAPSHOT}")
+    for n, us, derived in rows:
+        print(f"{n},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,35 +2,36 @@
 of Cholesky up/down-dating (Seeger 2004, cited by the paper).
 
 Maintains the factor of A_t = lambda*I + sum_{s in window} x_s x_s^T and the
-solution w_t = A_t^{-1} X^T y over a sliding window of observations:
-each step UPDATES with the newest batch of rows and DOWNDATES the batch
-falling out of the window — never refactorizing. Compares against the exact
-windowed solve.
+solution w_t = A_t^{-1} X^T y over a sliding window of observations as ONE
+stateful ``CholFactor``: each step ``.update``s with the newest batch of
+rows and ``.downdate``s the batch falling out of the window — never
+refactorizing — and reads the solution back with ``.solve``. Compares
+against the exact windowed solve.
 
 Two modes:
 
-* single  — one stream, the paper's original workload (serial reference path).
-* batched — a fleet of independent per-user streams advanced in lockstep via
-  ``chol_update_batched`` on the fused single-launch kernel (DESIGN.md §5):
-  one device dispatch updates every user's factor, the serving-shaped
-  workload the batched API exists for.
+* single  — one stream, the paper's original workload (serial reference
+  backend picked by the registry heuristic).
+* batched — a fleet of independent per-user streams advanced in lockstep:
+  one batched ``CholFactor`` on the fused single-launch kernel (DESIGN.md
+  §5) absorbs every user's modification in one device dispatch, the
+  serving-shaped workload the batched factor exists for.
 
 Run:  PYTHONPATH=src python examples/online_ridge.py [--batched] [--users B]
 """
 import argparse
 import collections
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import chol_factor, chol_solve, chol_update, chol_update_batched
+from repro.core import CholFactor
 
 
 def run_single(*, d=64, batch=8, window_batches=4, steps=12, lam=1e-1, seed=0):
     rng = np.random.default_rng(seed)
     true_w = rng.normal(size=(d,)).astype(np.float32)
-    L = chol_factor(jnp.eye(d) * lam)  # factor of lambda*I
+    f = CholFactor.identity(d, scale=lam, backend="reference")
     xty = jnp.zeros((d,))
     window = collections.deque()
 
@@ -41,17 +42,17 @@ def run_single(*, d=64, batch=8, window_batches=4, steps=12, lam=1e-1, seed=0):
         Xj, yj = jnp.asarray(X), jnp.asarray(y)
 
         # Rank-`batch` update with the new rows.
-        L = chol_update(L, Xj.T, sigma=1, method="reference")
+        f = f.update(Xj.T)
         xty = xty + Xj.T @ yj
         window.append((Xj, yj))
 
         # Slide: downdate the expiring batch (the paper's downdate in anger).
         if len(window) > window_batches:
             Xold, yold = window.popleft()
-            L = chol_update(L, Xold.T, sigma=-1, method="reference")
+            f = f.downdate(Xold.T)
             xty = xty - Xold.T @ yold
 
-        w = chol_solve(L, xty)
+        w = f.solve(xty)
 
         # Exact windowed solution for comparison.
         Xw = np.concatenate([np.asarray(x) for x, _ in window])
@@ -70,18 +71,20 @@ def run_batched(*, users=4, d=64, batch=8, window_batches=4, steps=8,
                 lam=1e-1, panel=32, seed=0):
     """A fleet of independent sliding-window ridge streams, one per user.
 
-    Every step issues exactly TWO batched device calls for the whole fleet
-    (one update, one downdate) instead of 2*users — the launch economics the
-    fused kernel brings to serving.
+    ONE batched CholFactor holds every user's statistics; every step issues
+    exactly TWO batched device calls for the whole fleet (one update, one
+    downdate) instead of 2*users — the launch economics the fused kernel
+    brings to serving.
     """
     rng = np.random.default_rng(seed)
     true_w = rng.normal(size=(users, d)).astype(np.float32)
-    L = jnp.broadcast_to(chol_factor(jnp.eye(d) * lam), (users, d, d))
+    f = CholFactor.identity(d, scale=lam, batch=users, backend="fused",
+                            panel=panel)
     xty = jnp.zeros((users, d))
     window = collections.deque()
-    solve_all = jax.vmap(chol_solve)
 
-    print(f"fleet of {users} users, d={d}, rank-{batch} window slides")
+    print(f"fleet of {users} users, d={d}, rank-{batch} window slides "
+          f"({f!r})")
     print(f"{'step':>4} {'max_err_vs_exact':>18} {'mean_w_err':>12}")
     for t in range(steps):
         X = rng.normal(size=(users, batch, d)).astype(np.float32)
@@ -90,21 +93,16 @@ def run_batched(*, users=4, d=64, batch=8, window_batches=4, steps=8,
         Xj, yj = jnp.asarray(X), jnp.asarray(y)
 
         # One launch updates every user's factor (V is (B, d, batch)).
-        L = chol_update_batched(
-            L, jnp.swapaxes(Xj, 1, 2), sigma=1, method="fused", panel=panel
-        )
+        f = f.update(jnp.swapaxes(Xj, 1, 2))
         xty = xty + jnp.einsum("ubd,ub->ud", Xj, yj)
         window.append((Xj, yj))
 
         if len(window) > window_batches:
             Xold, yold = window.popleft()
-            L = chol_update_batched(
-                L, jnp.swapaxes(Xold, 1, 2), sigma=-1, method="fused",
-                panel=panel,
-            )
+            f = f.downdate(jnp.swapaxes(Xold, 1, 2))
             xty = xty - jnp.einsum("ubd,ub->ud", Xold, yold)
 
-        w = solve_all(L, xty)
+        w = f.solve(xty)
 
         # Exact per-user windowed solutions.
         errs, werrs = [], []

@@ -6,11 +6,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
+    CholFactor,
+    backends,
     chol_downdate,
     chol_factor,
     chol_solve,
     chol_update,
     modify_error,
+    resolve_backend_for,
 )
 
 # --- Build an SPD matrix and its upper Cholesky factor (A = L^T L). -------
@@ -43,3 +46,19 @@ print(f"solve:    max residual = {float(resid):.3e}")
 # --- Pallas kernel path (interpret mode on CPU, Mosaic on TPU). -----------
 L_pal = chol_update(L, V, method="pallas_gemm", panel=128)
 print(f"pallas:   max|gemm - pallas| = {float(jnp.max(jnp.abs(L_up - L_pal))):.3e}")
+
+# --- The stateful engine: one CholFactor, every op on the same object. -----
+# Backends are a registry ('auto' resolves by device/size heuristics); the
+# factor is a pytree, so it jits, vmaps, and lives in optimizer state.
+print(f"registered backends: {backends.names()}")
+f = CholFactor.from_matrix(A, panel=128)   # backend='auto'
+print(f"{f!r} -> auto resolves to {resolve_backend_for(f)!r}")
+f = f.update(V)                            # A + V V^T, no refactorization
+x2 = f.solve(b)                            # same two triangular solves
+print(f"factor:   max|x - x_factor| = {float(jnp.max(jnp.abs(x - x2))):.3e}")
+print(f"logdet:   {float(f.logdet()):.2f}")
+guarded, ok = f.downdate_guarded(100.0 * V)  # PD guard refuses bad downdates
+print(f"guarded downdate of an infeasible V: ok={bool(ok)} (factor unchanged)")
+f = f.downdate(V)                          # back to the original statistics
+print(f"object roundtrip: max|L - f.data| = "
+      f"{float(jnp.max(jnp.abs(L - f.data))):.3e}")

@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Perf-trajectory snapshot (ISSUE 2 CI satellite): run the benchmark suite
+# and APPEND one JSON record per run to benchmarks/results/BENCH_cholupdate.json
+# so future PRs can diff their numbers against every predecessor.
+#
+#   scripts/bench.sh              # quick sizes (CI-friendly)
+#   scripts/bench.sh --full       # paper-scale sizes
+#   scripts/bench.sh --only cholupdate,kernels
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m benchmarks.snapshot "$@"

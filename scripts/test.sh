@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
 # One-step reproducible tier-1 test run (ROADMAP.md "Tier-1 verify").
 #
-#   scripts/test.sh            # run the suite
+#   scripts/test.sh            # run the full suite
+#   scripts/test.sh --fast     # tier-1 fast split: skips @pytest.mark.slow
+#                              # (multi-device subprocesses, large-n sweeps)
 #   scripts/test.sh -k fused   # extra args forwarded to pytest
 #
 # Installs dev deps (hypothesis etc.) when pip is available and the
@@ -10,6 +12,12 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+FAST_ARGS=()
+if [[ "${1:-}" == "--fast" ]]; then
+    shift
+    FAST_ARGS=(-m "not slow")
+fi
+
 if ! python -c "import hypothesis" 2>/dev/null; then
     echo "[test.sh] hypothesis missing; attempting pip install -r requirements-dev.txt" >&2
     pip install -r requirements-dev.txt 2>/dev/null \
@@ -17,4 +25,5 @@ if ! python -c "import hypothesis" 2>/dev/null; then
 fi
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+# ${arr[@]+...} guard: empty arrays trip `set -u` on bash < 4.4 (macOS 3.2).
+exec python -m pytest -x -q ${FAST_ARGS[@]+"${FAST_ARGS[@]}"} "$@"

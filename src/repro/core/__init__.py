@@ -3,10 +3,19 @@
 ``ref`` is the trusted serial oracle (paper Algorithm 1), ``blocked`` the
 panelled TPU-shaped implementation (paper §4 plus the GEMM adaptation),
 ``distributed`` the shard_map multi-device version, ``solve`` the consumer
-utilities. ``api.chol_update`` is the public entry point.
+utilities. ``backends`` is the registry every execution path is registered
+in; ``api.chol_update`` is the functional entry point and
+``factor.CholFactor`` the stateful engine object consumers maintain.
 """
-from repro.core.api import chol_downdate, chol_update, chol_update_batched
+from repro.core import backends
+from repro.core.api import (
+    chol_downdate,
+    chol_downdate_batched,
+    chol_update,
+    chol_update_batched,
+)
 from repro.core.blocked import chol_update_blocked
+from repro.core.factor import CholFactor, resolve_backend_for
 from repro.core.ref import chol_update_dense, chol_update_ref, modify_error
 from repro.core.solve import (
     chol_factor,
@@ -18,9 +27,13 @@ from repro.core.solve import (
 )
 
 __all__ = [
+    "backends",
+    "CholFactor",
+    "resolve_backend_for",
     "chol_update",
     "chol_update_batched",
     "chol_downdate",
+    "chol_downdate_batched",
     "chol_update_blocked",
     "chol_update_ref",
     "chol_update_dense",

@@ -1,7 +1,8 @@
 """Public API for rank-k Cholesky up/down-dating.
 
 ``chol_update`` is the single entry point the rest of the framework uses; the
-``method`` argument selects the execution path:
+``method`` argument names a backend from the registry
+(``repro.core.backends``):
 
 * ``reference``   — serial oracle (O(k n^2), paper Algorithm 1).
 * ``paper``       — panelled, faithful element-wise panel apply (paper §4).
@@ -12,21 +13,47 @@
 * ``fused``       — single-launch pipelined Pallas kernel: the whole panel
                     dependency chain in ONE ``pallas_call``, rotation state
                     parked in VMEM scratch (DESIGN.md §5).
-* ``auto``        — heuristic: reference for tiny n, gemm otherwise.
+* ``sharded``     — column-sharded multi-device driver composing the fused
+                    kernel, one launch per shard (DESIGN.md §7); pass
+                    ``mesh=`` (and optionally ``axis=``).
+* ``auto``        — heuristic (``backends.resolve``): fused on a
+                    Pallas-capable device or under explicit interpret mode,
+                    reference for tiny n, gemm otherwise.
 
-``chol_update_batched`` vmaps any of these over stacked ``(B, n, n)``
-factors — the serving workload of many concurrent per-user updates.
+Every path is differentiable: dispatch runs through the Murray (2016)
+derivative rules in ``repro.core.autodiff``, so ``jax.grad``/``jax.jvp`` of
+a maintained factor never trace the underlying recurrence or kernel.
+
+``chol_update_batched`` / ``chol_downdate_batched`` vmap any single-device
+backend over stacked ``(B, n, n)`` factors — the serving workload of many
+concurrent per-user updates.
+
+The stateful-factor object API (update/downdate/solve/logdet on one carried
+value) lives in ``repro.core.factor.CholFactor``; these functions remain as
+the thin functional face over the same registry.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import blocked, ref
+from repro.core import autodiff, backends
 
-_METHODS = ("reference", "paper", "gemm", "pallas", "pallas_gemm", "fused", "auto")
+
+@functools.lru_cache(maxsize=None)
+def _cached_impl(method: str, panel: int, interpret: Optional[bool],
+                 opts_items: tuple):
+    """One impl closure per (method, panel, interpret, opts) so the
+    custom_jvp wrapper sees a stable hashable callable (warm jit caches)."""
+    opts = dict(opts_items)
+
+    def impl(L, V, sigma):
+        return backends.dispatch(L, V, sigma=sigma, method=method,
+                                 panel=panel, interpret=interpret, **opts)
+
+    return impl
 
 
 def chol_update(
@@ -37,6 +64,7 @@ def chol_update(
     method: str = "auto",
     panel: int = 256,
     interpret: Optional[bool] = None,
+    **opts,
 ):
     """Rank-k up/down-date of the upper Cholesky factor L (A = L^T L).
 
@@ -44,42 +72,26 @@ def chol_update(
       L: (n, n) upper-triangular factor with positive diagonal.
       V: (n, k) or (n,) modification matrix.
       sigma: +1 for update (A + V V^T), -1 for downdate (A - V V^T).
-      method: execution path, see module docstring.
+      method: backend name or 'auto', see module docstring.
       panel: row-panel size for the blocked paths.
       interpret: force Pallas interpret mode (defaults to auto-detect: True on
         CPU, False on TPU).
+      **opts: backend-specific options (e.g. ``mesh=``/``axis=`` for
+        'sharded', ``panel_apply=`` for 'fused').
 
     Returns:
       The modified upper-triangular factor.
     """
-    if method not in _METHODS:
-        raise ValueError(f"method must be one of {_METHODS}, got {method!r}")
-    n = L.shape[0]
-    if method == "auto":
-        method = "reference" if n < 2 * panel else "gemm"
-    if method == "reference":
-        return ref.chol_update_ref(L, V, sigma=sigma)
-    if method in ("paper", "gemm"):
-        return blocked.chol_update_blocked(
-            L, V, sigma=sigma, panel=panel, strategy=method
+    if method not in backends.methods():
+        raise ValueError(
+            f"method must be one of {backends.methods()}, got {method!r}"
         )
-    # Pallas paths imported lazily so the pure-JAX core has no kernel deps.
-    if method == "fused":
-        from repro.kernels import fused as kernel_fused
-
-        return kernel_fused.chol_update_fused(
-            L, V, sigma=sigma, panel=panel, interpret=interpret
-        )
-    from repro.kernels import ops as kernel_ops
-
-    return kernel_ops.chol_update_pallas(
-        L,
-        V,
-        sigma=sigma,
-        panel=panel,
-        strategy="gemm" if method == "pallas_gemm" else "paper",
-        interpret=interpret,
-    )
+    if sigma not in (1, -1):
+        raise ValueError(f"sigma must be +1 or -1, got {sigma}")
+    if V.ndim == 1:
+        V = V[:, None]
+    impl = _cached_impl(method, panel, interpret, tuple(sorted(opts.items())))
+    return autodiff.diffable_update(impl, sigma, L, V)
 
 
 def chol_update_batched(
@@ -90,6 +102,7 @@ def chol_update_batched(
     method: str = "fused",
     panel: int = 256,
     interpret: Optional[bool] = None,
+    **opts,
 ):
     """Batched rank-k up/down-date over stacked factors (one vmapped launch).
 
@@ -101,8 +114,9 @@ def chol_update_batched(
     Args:
       L: (B, n, n) stacked upper-triangular factors.
       V: (B, n, k) — or (B, n), broadcast to rank 1 — stacked modifications.
-      sigma, method, panel, interpret: as in ``chol_update`` (shared across
-        the batch; per-element sigma would break the single-kernel grid).
+      sigma, method, panel, interpret, **opts: as in ``chol_update`` (shared
+        across the batch; per-element sigma would break the single-kernel
+        grid).
 
     Returns:
       (B, n, n) stacked updated factors.
@@ -115,10 +129,13 @@ def chol_update_batched(
         raise ValueError(
             f"V must be (B, n, k) matching L {L.shape}, got {V.shape}"
         )
+    if method == "sharded":
+        raise ValueError("method='sharded' does not support the batched API")
 
     def one(l, v):
         return chol_update(
-            l, v, sigma=sigma, method=method, panel=panel, interpret=interpret
+            l, v, sigma=sigma, method=method, panel=panel, interpret=interpret,
+            **opts,
         )
 
     return jax.vmap(one)(L, V)
@@ -127,3 +144,8 @@ def chol_update_batched(
 def chol_downdate(L, V, **kw):
     """Convenience wrapper for ``chol_update(..., sigma=-1)``."""
     return chol_update(L, V, sigma=-1, **kw)
+
+
+def chol_downdate_batched(L, V, **kw):
+    """Convenience wrapper for ``chol_update_batched(..., sigma=-1)``."""
+    return chol_update_batched(L, V, sigma=-1, **kw)

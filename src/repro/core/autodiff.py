@@ -1,0 +1,68 @@
+"""Differentiation rules for the rank-k Cholesky modification.
+
+``chol_update`` computes ``L~ = chol(L^T L + sigma V V^T)`` by a long chain
+of hyperbolic rotations (or a Pallas kernel, which JAX cannot differentiate
+at all). Differentiating that chain op-by-op is both wasteful and fragile;
+Murray (2016, "Differentiation of the Cholesky decomposition") gives the
+blocked/level-3 derivative rules that let us differentiate *the function*
+instead of *the algorithm*:
+
+Forward (JVP).  With the upper convention ``A~ = L~^T L~``, the Cholesky
+differential is
+
+    dL~ = Psi(L~^{-T} dA~ L~^{-1}) L~,
+    Psi(M) = triu(M) - (1/2) diag(M),        [Murray eq. 5, transposed]
+
+and the modification contributes ``dA~ = dL^T L + L^T dL
++ sigma (dV V^T + V dV^T)``. The tangent map costs two triangular solves
+and two GEMMs — O(n^3/3) less than re-running the recurrence, and valid
+for every backend including the fused Pallas kernel.
+
+Reverse (VJP).  The tangent map above is linear in ``(dL, dV)`` with
+coefficients depending only on primal values, so JAX obtains the adjoint by
+transposing it (jax.linearize + transpose); this reproduces Murray's
+level-3 reverse rule ``A bar = (1/2) L~^{-1} (Phi + Phi^T) L~^{-T}`` with
+``Phi = Phi(L~ bar L~^T)`` without a second hand-written formula, and is
+what ``jax.grad`` exercises (gradcheck in tests/test_factor.py).
+
+The wrapper also *insulates* the primal from AD: the Pallas kernels and the
+lax.scan recurrences are never traced for derivatives, so the optimizer's
+preconditioner update stays inside one traced graph on any backend.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _psi(M):
+    """Upper-triangular half-diagonal projector: triu(M) - diag(M)/2."""
+    return jnp.triu(M) - 0.5 * jnp.diag(jnp.diagonal(M))
+
+
+@functools.partial(jax.custom_jvp, nondiff_argnums=(0, 1))
+def diffable_update(impl, sigma, L, V):
+    """``impl(L, V, sigma) -> L_new`` wrapped with Murray's derivative rules.
+
+    ``impl`` must be a hashable callable (use a cached functools.partial so
+    jit caches stay warm); ``sigma`` is static. ``V`` must already be
+    ``(n, k)`` — normalise vectors before calling.
+    """
+    return impl(L, V, sigma)
+
+
+@diffable_update.defjvp
+def _diffable_update_jvp(impl, sigma, primals, tangents):
+    L, V = primals
+    dL, dV = tangents
+    L_new = diffable_update(impl, sigma, L, V)
+    # dA~ = d(L^T L) + sigma d(V V^T), symmetric by construction.
+    dA = dL.T @ L + L.T @ dL + sigma * (dV @ V.T + V @ dV.T)
+    # M = L~^{-T} dA~ L~^{-1} via two triangular solves against the output
+    # factor (both linear in the tangent, hence transposable for the VJP).
+    X = jax.scipy.linalg.solve_triangular(L_new, dA, trans=1, lower=False)
+    M = jax.scipy.linalg.solve_triangular(L_new, X.T, trans=1, lower=False).T
+    dL_new = _psi(M) @ L_new
+    return L_new, dL_new

@@ -1,0 +1,186 @@
+"""Backend registry for rank-k Cholesky up/down-dating (DESIGN.md §7).
+
+Every execution path of the modification — the serial oracle, the panelled
+jnp drivers, the per-panel Pallas kernels, the single-launch fused kernel,
+and the column-sharded multi-device driver — is a registered implementation
+of ONE protocol::
+
+    update(L, V, *, sigma, panel, interpret, **opts) -> L_new
+
+``repro.core.api.chol_update`` dispatches through this table instead of an
+if/elif ladder, and ``resolve`` replaces hard-coded method strings with a
+heuristic over (device kind, problem size, interpret mode), so consumers ask
+for *a* backend ("auto") rather than *the* backend.
+
+Registration is eager (the names exist at import time) but the Pallas and
+distributed modules are imported lazily inside each backend function, so the
+pure-JAX core carries no kernel dependencies until a kernel path runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """One registered implementation of the rank-k modification protocol."""
+
+    name: str
+    fn: Callable
+    kind: str  # 'serial' | 'blocked' | 'pallas' | 'collective'
+    description: str
+
+    def __call__(self, L, V, *, sigma, panel, interpret, **opts):
+        return self.fn(L, V, sigma=sigma, panel=panel, interpret=interpret,
+                       **opts)
+
+
+_REGISTRY: Dict[str, Backend] = {}
+
+
+def register(name: str, *, kind: str, description: str):
+    """Decorator registering ``fn`` as backend ``name``."""
+
+    def deco(fn: Callable) -> Callable:
+        if name in _REGISTRY:
+            raise ValueError(f"backend {name!r} already registered")
+        _REGISTRY[name] = Backend(name, fn, kind, description)
+        return fn
+
+    return deco
+
+
+def get(name: str) -> Backend:
+    """Look up a backend; raises ValueError naming the valid set."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"method must be one of {methods()}, got {name!r}"
+        ) from None
+
+
+def names() -> Tuple[str, ...]:
+    """Registered backend names, registration order."""
+    return tuple(_REGISTRY)
+
+
+def methods() -> Tuple[str, ...]:
+    """Valid ``method=`` strings: every backend plus the 'auto' heuristic."""
+    return names() + ("auto",)
+
+
+def resolve(
+    method: str,
+    *,
+    n: int,
+    panel: int = 256,
+    interpret: Optional[bool] = None,
+    device_kind: Optional[str] = None,
+) -> str:
+    """Map ``method`` (possibly 'auto') to a concrete backend name.
+
+    The 'auto' heuristic prefers the single-launch fused kernel whenever a
+    Pallas-capable device is present (TPU) or interpret mode was explicitly
+    requested; otherwise it falls back to the pure-JAX paths: the serial
+    oracle for problems under two panels (where panelling buys nothing) and
+    the transform-GEMM driver beyond.
+    """
+    if method != "auto":
+        get(method)  # validate
+        return method
+    if device_kind is None:
+        device_kind = jax.default_backend()
+    if device_kind == "tpu" or interpret:
+        return "fused"
+    if n < 2 * panel:
+        return "reference"
+    return "gemm"
+
+
+def dispatch(L, V, *, sigma, method, panel, interpret, **opts):
+    """Resolve + run: the single funnel every consumer's update flows through."""
+    name = resolve(method, n=L.shape[0], panel=panel, interpret=interpret)
+    return get(name)(L, V, sigma=sigma, panel=panel, interpret=interpret,
+                     **opts)
+
+
+# ---------------------------------------------------------------------------
+# Registered implementations. Lazy imports keep the pure-JAX core free of
+# kernel/distributed dependencies until those paths actually run.
+# ---------------------------------------------------------------------------
+
+
+@register("reference", kind="serial",
+          description="serial hyperbolic sweeps, O(k n^2) (paper Alg. 1)")
+def _reference(L, V, *, sigma, panel, interpret, **opts):
+    del panel, interpret, opts
+    from repro.core import ref
+
+    return ref.chol_update_ref(L, V, sigma=sigma)
+
+
+@register("paper", kind="blocked",
+          description="panelled, element-wise panel apply (paper §4)")
+def _paper(L, V, *, sigma, panel, interpret, **opts):
+    del interpret, opts
+    from repro.core import blocked
+
+    return blocked.chol_update_blocked(L, V, sigma=sigma, panel=panel,
+                                       strategy="paper")
+
+
+@register("gemm", kind="blocked",
+          description="panelled, transform-GEMM panel apply (TPU-native)")
+def _gemm(L, V, *, sigma, panel, interpret, **opts):
+    del interpret, opts
+    from repro.core import blocked
+
+    return blocked.chol_update_blocked(L, V, sigma=sigma, panel=panel,
+                                       strategy="gemm")
+
+
+@register("pallas", kind="pallas",
+          description="per-panel Pallas kernels, element-wise panel apply")
+def _pallas(L, V, *, sigma, panel, interpret, **opts):
+    from repro.kernels import ops as kernel_ops
+
+    return kernel_ops.chol_update_pallas(L, V, sigma=sigma, panel=panel,
+                                         strategy="paper",
+                                         interpret=interpret, **opts)
+
+
+@register("pallas_gemm", kind="pallas",
+          description="per-panel Pallas kernels, MXU GEMM panel apply")
+def _pallas_gemm(L, V, *, sigma, panel, interpret, **opts):
+    from repro.kernels import ops as kernel_ops
+
+    return kernel_ops.chol_update_pallas(L, V, sigma=sigma, panel=panel,
+                                         strategy="gemm",
+                                         interpret=interpret, **opts)
+
+
+@register("fused", kind="pallas",
+          description="single-launch pipelined Pallas kernel (DESIGN.md §5)")
+def _fused(L, V, *, sigma, panel, interpret, **opts):
+    from repro.kernels import fused as kernel_fused
+
+    return kernel_fused.chol_update_fused(L, V, sigma=sigma, panel=panel,
+                                          interpret=interpret, **opts)
+
+
+@register("sharded", kind="collective",
+          description="column-sharded multi-device driver composing the "
+                      "fused kernel (DESIGN.md §4+§7); requires mesh=")
+def _sharded(L, V, *, sigma, panel, interpret, mesh=None, axis="model",
+             **opts):
+    if mesh is None:
+        raise ValueError("method='sharded' requires a mesh= argument")
+    from repro.core import distributed
+
+    return distributed.chol_update_sharded(L, V, sigma=sigma, mesh=mesh,
+                                           axis=axis, panel=panel,
+                                           interpret=interpret, **opts)

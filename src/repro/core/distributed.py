@@ -11,27 +11,41 @@ CPU/GPU split maps onto a device grid:
   collective per panel);
 * the *panel phase* is embarrassingly parallel over column shards, exactly as
   the paper's thread-per-column kernel: each device transforms the rows of its
-  own columns, either element-wise (``strategy='paper'``) or with the
-  transform GEMM (``strategy='gemm'``).
+  own columns.
+
+Three strategies share that decomposition:
+
+* ``fused`` (default) — the distributed fused composition (DESIGN.md §7):
+  a jnp *chain phase* runs all diagonal recurrences and V^T evolution
+  (one psum per panel, no kernels), then ONE Pallas launch per shard
+  (``repro.kernels.sharded``) applies every off-diagonal tile. The key
+  fact making the tiles independent: each row-panel of L is read in its
+  original state (row-panels are written exactly once, by their own panel
+  step), so all sequential coupling lives in the chain-phase outputs
+  (``T^(p)``, ``D~^(p)``, and the running ``V^T`` snapshots).
+* ``gemm`` / ``paper`` — the per-panel jnp drivers (transform GEMM or the
+  paper's element-wise rotation chain) interleaved with the diagonal
+  phase in one lax.scan, as in the original mapping (§4).
 
 Finalized columns (global index < panel start) hold zeros in the active rows,
-which both strategies map to zeros, so every device does uniform-shape work
-each panel (a ``lax.scan``) with no load imbalance; the triangular waste is
-accounted for in the §Perf analysis.
+which every strategy maps to zeros, so devices do uniform-shape work with no
+load imbalance; the triangular waste is accounted for in the §Perf analysis.
 """
 from __future__ import annotations
 
 import functools
-from typing import Sequence, Union
+from typing import Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import blocked
-from repro.runtime.compat import shard_map as _shard_map
+from repro.runtime.compat import shard_map as _shard_map, shard_map_norep
 
 AxisNames = Union[str, Sequence[str]]
+
+STRATEGIES = ("fused", "gemm", "paper")
 
 
 def _axis_tuple(axis: AxisNames):
@@ -54,7 +68,8 @@ def chol_update_sharded(
     mesh,
     axis: AxisNames = "model",
     panel: int = 256,
-    strategy: str = "gemm",
+    strategy: str = "fused",
+    interpret: Optional[bool] = None,
 ):
     """Rank-k up/down-date of a column-sharded factor.
 
@@ -65,13 +80,18 @@ def chol_update_sharded(
       mesh: the jax Mesh holding ``axis``.
       axis: mesh axis name (or tuple of names) the columns are sharded over.
       panel: row-panel size; must divide the per-device column count.
-      strategy: 'gemm' (transform GEMM, default) or 'paper' (element-wise).
+      strategy: 'fused' (one Pallas launch per shard, default), 'gemm'
+        (per-panel transform GEMM) or 'paper' (element-wise).
+      interpret: Pallas interpret mode for the fused strategy (default:
+        auto — True off-TPU). Ignored by the jnp strategies.
 
     Returns:
       The updated factor with the same sharding.
     """
     if sigma not in (1, -1):
         raise ValueError("sigma must be +1 or -1")
+    if strategy not in STRATEGIES:
+        raise ValueError(f"strategy must be one of {STRATEGIES}, got {strategy!r}")
     axes = _axis_tuple(axis)
     n = L.shape[0]
     k = V.shape[1] if V.ndim == 2 else 1
@@ -87,14 +107,24 @@ def chol_update_sharded(
         )
     if n % panel:
         raise ValueError(f"n={n} must be a multiple of panel={panel}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     vt = jnp.reshape(V, (n, k)).T
 
     col_spec = P(None, axes)
-    fn = functools.partial(
-        _sharded_update, sigma=sigma, axes=axes, mesh=mesh, panel=panel,
-        w_loc=w_loc, strategy=strategy,
-    )
-    mapped = _shard_map(
+    if strategy == "fused":
+        fn = functools.partial(
+            _sharded_update_fused, sigma=sigma, axes=axes, mesh=mesh,
+            panel=panel, w_loc=w_loc, interpret=bool(interpret),
+        )
+        wrap = shard_map_norep  # pallas_call has no replication rule
+    else:
+        fn = functools.partial(
+            _sharded_update_perpanel, sigma=sigma, axes=axes, mesh=mesh,
+            panel=panel, w_loc=w_loc, strategy=strategy,
+        )
+        wrap = _shard_map
+    mapped = wrap(
         fn,
         mesh=mesh,
         in_specs=(col_spec, col_spec),
@@ -105,9 +135,74 @@ def chol_update_sharded(
     return mapped(L, vt)
 
 
-def _sharded_update(L_loc, vt_loc, *, sigma, axes, mesh, panel, w_loc, strategy):
+def _gather_diag(L_loc, vt, p, *, panel, w_loc, me, axes):
+    """psum-gather the stacked [D_p; V^T_d] block from its owner device."""
+    k = vt.shape[0]
+    r0 = p * panel
+    owner = r0 // w_loc
+    loc_r0 = r0 % w_loc
+    d_cols = jax.lax.dynamic_slice(L_loc, (r0, loc_r0), (panel, panel))
+    vtd = jax.lax.dynamic_slice(vt, (0, loc_r0), (k, panel))
+    stacked = jnp.concatenate([d_cols, vtd], axis=0)
+    stacked = jnp.where(owner == me, stacked, jnp.zeros_like(stacked))
+    stacked = jax.lax.psum(stacked, axes)
+    return stacked[:panel], stacked[panel:]
+
+
+# ---------------------------------------------------------------------------
+# Fused composition: chain phase (jnp) + one panel-phase kernel per shard.
+# ---------------------------------------------------------------------------
+
+
+def _sharded_update_fused(L_loc, vt_loc, *, sigma, axes, mesh, panel, w_loc,
+                          interpret):
+    from repro.kernels import sharded as sharded_k
+
     n = L_loc.shape[0]
-    k = vt_loc.shape[0]
+    me = _combined_axis_index(axes, mesh)
+    dev_off = me * w_loc
+    gcol = dev_off + jnp.arange(w_loc)
+    n_panels = n // panel
+
+    # --- chain phase: every diagonal recurrence + the V^T evolution -------
+    # Row-panels of L are never written here, so every slice below reads
+    # ORIGINAL factor data; the only sequential state is vt.
+    def chain_body(vt, p):
+        r0 = p * panel
+        d_blk, vtd_g = _gather_diag(L_loc, vt, p, panel=panel, w_loc=w_loc,
+                                    me=me, axes=axes)
+        D_new, _, _, T = blocked.panel_diag(d_blk, vtd_g, sigma,
+                                            with_transform=True)
+        vt_in = vt  # snapshot entering panel p: the kernel's V^T operand
+        R = jax.lax.dynamic_slice(L_loc, (r0, 0), (panel, w_loc))
+        vt_new = (
+            jnp.dot(T[panel:, :panel], R, preferred_element_type=jnp.float32)
+            + jnp.dot(T[panel:, panel:], vt,
+                      preferred_element_type=jnp.float32)
+        ).astype(vt.dtype)
+        in_block = (gcol >= r0) & (gcol < r0 + panel)
+        vt_new = jnp.where(in_block[None, :], jnp.zeros_like(vt_new), vt_new)
+        return vt_new, (T, D_new, vt_in)
+
+    _, (T_stack, D_stack, vt_stack) = jax.lax.scan(
+        chain_body, vt_loc, jnp.arange(n_panels)
+    )
+
+    # --- panel phase: the whole update in ONE launch on this shard --------
+    return sharded_k.panel_apply_sharded(
+        L_loc, T_stack, D_stack, vt_stack,
+        tile_off=me * (w_loc // panel), panel=panel, interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Per-panel jnp strategies (the original §4 mapping).
+# ---------------------------------------------------------------------------
+
+
+def _sharded_update_perpanel(L_loc, vt_loc, *, sigma, axes, mesh, panel,
+                             w_loc, strategy):
+    n = L_loc.shape[0]
     me = _combined_axis_index(axes, mesh)
     dev_off = me * w_loc
     gcol = dev_off + jnp.arange(w_loc)
@@ -116,15 +211,10 @@ def _sharded_update(L_loc, vt_loc, *, sigma, axes, mesh, panel, w_loc, strategy)
     def panel_body(carry, p):
         L_loc, vt_loc = carry
         r0 = p * panel
-        owner = r0 // w_loc
         loc_r0 = r0 % w_loc
         # --- gather the stacked diagonal block to all devices (one psum) ---
-        d_cols = jax.lax.dynamic_slice(L_loc, (r0, loc_r0), (panel, panel))
-        vtd = jax.lax.dynamic_slice(vt_loc, (0, loc_r0), (k, panel))
-        stacked = jnp.concatenate([d_cols, vtd], axis=0)
-        stacked = jnp.where(owner == me, stacked, jnp.zeros_like(stacked))
-        stacked = jax.lax.psum(stacked, axes)
-        d_blk, vtd_g = stacked[:panel], stacked[panel:]
+        d_blk, vtd_g = _gather_diag(L_loc, vt_loc, p, panel=panel,
+                                    w_loc=w_loc, me=me, axes=axes)
         # --- replicated serial diagonal phase (paper CPU role) ---
         d_new, c, s, T = blocked.panel_diag(
             d_blk, vtd_g, sigma, with_transform=(strategy == "gemm")

@@ -1,0 +1,210 @@
+"""``CholFactor``: the maintained Cholesky factor as a stateful pytree.
+
+The paper's whole point is that a factor absorbs rank-k modifications
+without refactorization — i.e. it is a *long-lived production object*, not
+the return value of a one-shot routine. This module gives that object a
+type: the upper factor plus its execution metadata (panel size, backend
+name, dtype policy, interpret flag), with methods for every operation the
+factor exists to serve::
+
+    f = CholFactor.from_matrix(A, backend="auto")
+    f = f.update(V)                  # A + V V^T, no refactorization
+    f = f.downdate(V)                # A - V V^T, ditto
+    x = f.solve(b)                   # two triangular solves
+    ld = f.logdet()                  # 2 sum log diag
+    ok = f.downdate_feasible(V)      # PD guard before a risky downdate
+
+``CholFactor`` is a registered pytree: it jits, vmaps, scans, and lives
+inside optimizer state (``repro.optim.cholesky_precond`` maintains one per
+parameter). The array leaf is ``data``; everything else is static aux, so a
+factor with a different backend is a different jaxpr — exactly the caching
+behaviour you want.
+
+Batching: ``data`` may be ``(B, n, n)`` — a fleet of per-user factors. All
+methods vmap over the leading axis automatically, and updates still cost
+one device launch on the fused backend (vmap folds B into the kernel grid).
+
+Every mutation dispatches through the backend registry
+(``repro.core.backends``) wrapped in the Murray derivative rules
+(``repro.core.autodiff``), so ``jax.grad`` through ``update``/``downdate``
+works on every backend, including the Pallas kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api, backends, solve as _solve
+
+Axis = Union[str, tuple]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CholFactor:
+    """Upper Cholesky factor (``A = L^T L``) + execution metadata.
+
+    Attributes:
+      data: (n, n) — or (B, n, n) batched — upper-triangular factor(s).
+      panel: row-panel size for the blocked/kernel backends.
+      backend: registry name or 'auto' (resolved per call by heuristics).
+      interpret: force Pallas interpret mode (None = auto-detect).
+      compute_dtype: dtype policy — modifications V are cast to this dtype
+        (None = the factor's own dtype).
+      mesh, axis: mesh binding for the 'sharded' backend (None otherwise).
+    """
+
+    data: jax.Array
+    panel: int = 256
+    backend: str = "auto"
+    interpret: Optional[bool] = None
+    compute_dtype: Optional[jnp.dtype] = None
+    mesh: Optional[object] = None
+    axis: Axis = "model"
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        aux = (self.panel, self.backend, self.interpret, self.compute_dtype,
+               self.mesh, self.axis)
+        return (self.data,), aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        (data,) = children
+        return cls(data, *aux)
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def from_matrix(cls, A, **meta) -> "CholFactor":
+        """Factor an SPD matrix (O(n^3), once) into a maintained factor."""
+        L = jnp.linalg.cholesky(A)
+        return cls(jnp.swapaxes(L, -1, -2), **meta)
+
+    @classmethod
+    def from_factor(cls, L, **meta) -> "CholFactor":
+        """Wrap an existing upper factor (no validation, no copy)."""
+        return cls(jnp.asarray(L), **meta)
+
+    @classmethod
+    def identity(cls, n: int, *, scale: float = 1.0, batch: Optional[int] = None,
+                 dtype=jnp.float32, **meta) -> "CholFactor":
+        """Factor of ``scale * I`` — the canonical warm-start (eps*I stats)."""
+        eye = jnp.sqrt(jnp.asarray(scale, dtype)) * jnp.eye(n, dtype=dtype)
+        if batch is not None:
+            eye = jnp.broadcast_to(eye, (batch, n, n))
+        return cls(eye, **meta)
+
+    # -- metadata views -----------------------------------------------------
+    @property
+    def n(self) -> int:
+        return self.data.shape[-1]
+
+    @property
+    def batched(self) -> bool:
+        return self.data.ndim == 3
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    def with_backend(self, backend: str, **meta) -> "CholFactor":
+        """Same factor, different execution metadata (data is shared)."""
+        return dataclasses.replace(self, backend=backend, **meta)
+
+    def replace(self, **changes) -> "CholFactor":
+        return dataclasses.replace(self, **changes)
+
+    # -- the paper's operations --------------------------------------------
+    def _mutate(self, V, sigma: int) -> "CholFactor":
+        if self.compute_dtype is not None:
+            V = jnp.asarray(V, self.compute_dtype)
+        opts = {}
+        if self.backend == "sharded":
+            if self.batched:
+                raise ValueError("sharded backend does not support batched "
+                                 "factors; shard the batch axis instead")
+            opts = {"mesh": self.mesh, "axis": self.axis}
+        if self.batched:
+            new = api.chol_update_batched(
+                self.data, V, sigma=sigma, method=self.backend,
+                panel=self.panel, interpret=self.interpret, **opts)
+        else:
+            new = api.chol_update(
+                self.data, V, sigma=sigma, method=self.backend,
+                panel=self.panel, interpret=self.interpret, **opts)
+        return dataclasses.replace(self, data=new)
+
+    def update(self, V) -> "CholFactor":
+        """Absorb ``+ V V^T`` (rank k) without refactorization."""
+        return self._mutate(V, 1)
+
+    def downdate(self, V) -> "CholFactor":
+        """Remove ``- V V^T`` (rank k) without refactorization."""
+        return self._mutate(V, -1)
+
+    def downdate_guarded(self, V):
+        """Feasibility-guarded downdate: ``(factor', ok)``.
+
+        ``factor'`` is the downdated factor where ``A - V V^T`` stays PD and
+        the *unchanged* factor where it does not (``ok`` reports which).
+        Both branches are computed (jnp.where semantics) — this is the jit-
+        and vmap-safe guard for serving-time downdates of untrusted data.
+        """
+        ok = self.downdate_feasible(V)
+        down = self.downdate(V)
+        mask = ok[..., None, None] if self.batched else ok
+        new = jnp.where(mask, down.data, self.data)
+        return dataclasses.replace(self, data=new), ok
+
+    def scale(self, alpha) -> "CholFactor":
+        """Factor of ``alpha^2 * A``: exact exponential decay of statistics."""
+        return dataclasses.replace(self, data=self.data * alpha)
+
+    # -- consumer operations (the reason the factor is maintained) ----------
+    def _percore(self, fn, *args):
+        if self.batched:
+            return jax.vmap(fn)(self.data, *args)
+        return fn(self.data, *args)
+
+    def solve(self, b):
+        """Solve ``A x = b`` against the maintained factor."""
+        return self._percore(_solve.chol_solve, b)
+
+    def solve_triangular(self, b, *, trans: bool):
+        """One triangular solve: ``L^T x = b`` (trans) or ``L x = b``."""
+        if self.batched:
+            return jax.vmap(
+                lambda L, rhs: _solve.solve_triangular(L, rhs, trans=trans)
+            )(self.data, b)
+        return _solve.solve_triangular(self.data, b, trans=trans)
+
+    def logdet(self):
+        """``log det A`` from the maintained diagonal."""
+        return self._percore(_solve.chol_logdet)
+
+    def downdate_feasible(self, V):
+        """True where ``A - V V^T`` stays PD (per batch element)."""
+        return self._percore(_solve.downdate_feasible, V)
+
+    def is_valid(self, *, tol: float = 0.0):
+        """Strictly positive diagonal — the factor invariant."""
+        return self._percore(
+            lambda L: _solve.is_positive_factor(L, tol=tol))
+
+    def matrix(self):
+        """Materialise ``A = L^T L`` (O(n^3) — diagnostics only)."""
+        return jnp.swapaxes(self.data, -1, -2) @ self.data
+
+    def __repr__(self):  # keep aux readable in optimizer-state dumps
+        shape = "x".join(str(s) for s in self.data.shape)
+        return (f"CholFactor({shape} {self.data.dtype}, panel={self.panel}, "
+                f"backend={self.backend!r})")
+
+
+def resolve_backend_for(factor: CholFactor) -> str:
+    """The concrete backend a factor's next mutation will run on."""
+    return backends.resolve(factor.backend, n=factor.n, panel=factor.panel,
+                            interpret=factor.interpret)

@@ -14,33 +14,37 @@ dimensions are "arbitrary", not "parallel", by default), so the chain
 
     diag block 0 -> panel 0 -> diag block 1 -> panel 1 -> ...
 
-maps onto the row-major walk of a 2-D grid ``(p, j)``:
+maps onto a 1-D grid walking a ``PrefetchScalarGridSpec`` index table of the
+upper-triangular tile pairs ``(p, t)`` in row-major order
+(``np.triu_indices``): exactly ``nP(nP+1)/2`` steps, each one real work —
 
-* step ``(p, 0)``      — the serial diagonal phase on block ``p``: runs the
+* step with ``t == p`` — the serial diagonal phase on block ``p``: runs the
   hyperbolic recurrence, writes the updated diagonal tile, and parks the
   rotation coefficients ``(c, s)`` and the GEMM transform ``T`` in VMEM
   scratch, where they stay for the rest of the row — never touching HBM.
-* step ``(p, j>0)``    — applies the parked transform to column tile
-  ``t = p + j`` of the off-diagonal panel (GEMM on the MXU by default, or
-  the paper's element-wise rotation chain with ``panel_apply='paper'``).
+* step with ``t > p``  — applies the parked transform to column tile ``t``
+  of the off-diagonal panel (GEMM on the MXU by default, or the paper's
+  element-wise rotation chain with ``panel_apply='paper'``).
+
+The scalar-prefetched tables feed the BlockSpec index maps, so the pipeline
+prefetches exactly the tiles the chain visits — the earlier rectangular
+``(nP, nP)`` grid (kept as ``grid_mode='rect'`` for comparison) instead
+clamped ~nP²/2 out-of-range steps onto the trailing tile as empty kernel
+invocations. Same single launch either way; the squash removes the no-op
+grid steps themselves.
 
 The running ``V^T`` is the only state carried *across* rows ``p``; it lives
 in a ``(k, n)`` VMEM scratch buffer for the entire launch (loaded once at
-step (0, 0)), so the HBM traffic per panel is exactly one L-tile read + one
+step 0), so the HBM traffic per panel is exactly one L-tile read + one
 L-tile write — the paper's O(n k) per-panel (c, s) upload and V round-trip
 disappear entirely.
 
-Correctness of the pipelining: L's row-panels are disjoint across ``p`` (step
-``(p, j)`` reads and writes only row-panel ``p``), and all cross-panel
-coupling flows through the VMEM-resident ``V^T``; therefore no grid step ever
-reads an HBM tile that an earlier step wrote, and Pallas's input prefetch
-(fetching step i+1's block during step i) can never observe stale data.
-
-Grid rectangularisation: the trailing width shrinks as ``p`` advances, so the
-rectangular ``(nP, nP)`` grid has ~nP²/2 no-op steps whose block index is
-clamped to the last valid tile (same index -> no refetch, no reflush). These
-are empty kernel invocations, not wasted HBM traffic; see DESIGN.md §5 for
-the measured cost and the scalar-prefetch follow-on that would remove them.
+Correctness of the pipelining: L's row-panels are disjoint across ``p`` (a
+step of row ``p`` reads and writes only row-panel ``p``), and all
+cross-panel coupling flows through the VMEM-resident ``V^T``; therefore no
+grid step ever reads an HBM tile that an earlier step wrote, and Pallas's
+input prefetch (fetching step i+1's block during step i) can never observe
+stale data.
 """
 from __future__ import annotations
 
@@ -48,6 +52,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -55,32 +60,20 @@ from jax.experimental.pallas import tpu as pltpu
 # place, shared with the per-panel kernels (see the note in cholupdate.py).
 from repro.kernels.cholupdate import apply_rotations, diag_recurrence
 
+GRID_MODES = ("indexed", "rect")
 
-def _fused_kernel(
-    vt_in,
-    l_ref,
-    l_out,
-    vt_s,
-    t_s,
-    c_s,
-    s_s,
-    *,
-    sigma: int,
-    panel: int,
-    k: int,
-    n_tiles: int,
-    panel_apply: str,
-):
-    p = pl.program_id(0)
-    j = pl.program_id(1)
 
-    @pl.when((p == 0) & (j == 0))
+def _fused_body(p, t, vt_in, l_ref, l_out, vt_s, t_s, c_s, s_s, *,
+                first, diag_pred, apply_pred, sigma, panel, k, panel_apply):
+    """Shared kernel body: one chain step on tile (p, t), t >= p."""
+
+    @pl.when(first)
     def _load_vt():
         # V^T enters VMEM exactly once, at the first grid step, and never
         # returns to HBM: it is dead state once the factor is updated.
         vt_s[...] = vt_in[...]
 
-    @pl.when(j == 0)
+    @pl.when(diag_pred)
     def _diag():
         D = l_ref[...]
         vtd = vt_s[:, pl.dslice(p * panel, panel)]
@@ -93,9 +86,7 @@ def _fused_kernel(
         # The recurrence annihilates this V^T slab.
         vt_s[:, pl.dslice(p * panel, panel)] = jnp.zeros_like(vtd)
 
-    t = p + j
-
-    @pl.when((j > 0) & (t < n_tiles))
+    @pl.when(apply_pred)
     def _apply():
         R = l_ref[...]
         vtt = vt_s[:, pl.dslice(t * panel, panel)]
@@ -117,46 +108,100 @@ def _fused_kernel(
         vt_s[:, pl.dslice(t * panel, panel)] = vt_new
 
 
+def _indexed_kernel(p_tab, t_tab, vt_in, l_ref, l_out, vt_s, t_s, c_s, s_s,
+                    *, sigma, panel, k, panel_apply):
+    i = pl.program_id(0)
+    p, t = p_tab[i], t_tab[i]
+    # The table holds only valid chain steps: t == p is a diagonal phase,
+    # t > p a panel apply — no clamped no-ops to skip.
+    _fused_body(p, t, vt_in, l_ref, l_out, vt_s, t_s, c_s, s_s,
+                first=(i == 0), diag_pred=(t == p), apply_pred=(t > p),
+                sigma=sigma, panel=panel, k=k, panel_apply=panel_apply)
+
+
+def _rect_kernel(vt_in, l_ref, l_out, vt_s, t_s, c_s, s_s, *,
+                 sigma, panel, k, n_tiles, panel_apply):
+    p = pl.program_id(0)
+    j = pl.program_id(1)
+    t = p + j
+    # Out-of-range steps (t >= n_tiles) fail both predicates: empty kernel
+    # invocations on the clamped trailing tile.
+    _fused_body(p, t, vt_in, l_ref, l_out, vt_s, t_s, c_s, s_s,
+                first=(p == 0) & (j == 0), diag_pred=(j == 0),
+                apply_pred=(j > 0) & (t < n_tiles),
+                sigma=sigma, panel=panel, k=k, panel_apply=panel_apply)
+
+
+@functools.lru_cache(maxsize=None)
+def _pair_tables(n_tiles: int):
+    """Static row-major upper-triangular (p, t) index tables — the chain.
+
+    Kept as numpy so the cache holds trace-independent constants (jnp arrays
+    created inside a jit trace would leak tracers across calls).
+    """
+    ps, ts = np.triu_indices(n_tiles)
+    return np.asarray(ps, np.int32), np.asarray(ts, np.int32)
+
+
 @functools.partial(
-    jax.jit, static_argnames=("sigma", "panel", "panel_apply", "interpret")
+    jax.jit,
+    static_argnames=("sigma", "panel", "panel_apply", "grid_mode", "interpret"),
 )
-def _fused_call(L, vt, *, sigma, panel, panel_apply, interpret):
+def _fused_call(L, vt, *, sigma, panel, panel_apply, grid_mode, interpret):
     n_pad = L.shape[0]
     k = vt.shape[0]
     n_tiles = n_pad // panel
     pk = panel + k
-    last = n_tiles - 1
+    scratch_shapes = [
+        pltpu.VMEM((k, n_pad), L.dtype),   # running V^T (whole launch)
+        pltpu.VMEM((pk, pk), L.dtype),     # transform T   (one grid row)
+        pltpu.VMEM((panel, k), L.dtype),   # rotations c   (one grid row)
+        pltpu.VMEM((panel, k), L.dtype),   # rotations s   (one grid row)
+    ]
+    kw = dict(sigma=sigma, panel=panel, k=k, panel_apply=panel_apply)
+    if grid_mode == "indexed":
+        # 1-D grid over exactly the nP(nP+1)/2 chain steps; the scalar-
+        # prefetched tables drive both the body and the BlockSpec index maps.
+        p_tab, t_tab = _pair_tables(n_tiles)
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(int(p_tab.shape[0]),),
+            in_specs=[
+                pl.BlockSpec((k, n_pad), lambda i, pt, tt: (0, 0)),
+                pl.BlockSpec((panel, panel),
+                             lambda i, pt, tt: (pt[i], tt[i])),
+            ],
+            out_specs=pl.BlockSpec((panel, panel),
+                                   lambda i, pt, tt: (pt[i], tt[i])),
+            scratch_shapes=scratch_shapes,
+        )
+        out = pl.pallas_call(
+            functools.partial(_indexed_kernel, **kw),
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((n_pad, n_pad), L.dtype),
+            interpret=interpret,
+        )(jnp.asarray(p_tab), jnp.asarray(t_tab), vt, L)
+    else:
+        last = n_tiles - 1
 
-    def l_index(p, j):
-        # Clamp no-op steps (p + j past the trailing edge) onto the last
-        # valid tile of the row: same block index -> the pipeline neither
-        # refetches nor reflushes, and the kernel body skips them.
-        return (p, jnp.minimum(p + j, last))
+        def l_index(p, j):
+            # Clamp no-op steps (p + j past the trailing edge) onto the last
+            # valid tile of the row: same block index -> the pipeline neither
+            # refetches nor reflushes, and the kernel body skips them.
+            return (p, jnp.minimum(p + j, last))
 
-    out = pl.pallas_call(
-        functools.partial(
-            _fused_kernel,
-            sigma=sigma,
-            panel=panel,
-            k=k,
-            n_tiles=n_tiles,
-            panel_apply=panel_apply,
-        ),
-        grid=(n_tiles, n_tiles),
-        in_specs=[
-            pl.BlockSpec((k, n_pad), lambda p, j: (0, 0)),  # V^T: loaded once
-            pl.BlockSpec((panel, panel), l_index),          # L tile
-        ],
-        out_specs=pl.BlockSpec((panel, panel), l_index),
-        out_shape=jax.ShapeDtypeStruct((n_pad, n_pad), L.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((k, n_pad), L.dtype),   # running V^T (whole launch)
-            pltpu.VMEM((pk, pk), L.dtype),     # transform T   (one grid row)
-            pltpu.VMEM((panel, k), L.dtype),   # rotations c   (one grid row)
-            pltpu.VMEM((panel, k), L.dtype),   # rotations s   (one grid row)
-        ],
-        interpret=interpret,
-    )(vt, L)
+        out = pl.pallas_call(
+            functools.partial(_rect_kernel, n_tiles=n_tiles, **kw),
+            grid=(n_tiles, n_tiles),
+            in_specs=[
+                pl.BlockSpec((k, n_pad), lambda p, j: (0, 0)),  # V^T: once
+                pl.BlockSpec((panel, panel), l_index),          # L tile
+            ],
+            out_specs=pl.BlockSpec((panel, panel), l_index),
+            out_shape=jax.ShapeDtypeStruct((n_pad, n_pad), L.dtype),
+            scratch_shapes=scratch_shapes,
+            interpret=interpret,
+        )(vt, L)
     # Only the upper block-triangle is ever written; the strictly-lower tiles
     # of the output buffer are untouched garbage by design.
     return jnp.triu(out)
@@ -169,6 +214,7 @@ def chol_update_fused(
     sigma: int = 1,
     panel: int = 256,
     panel_apply: str = "gemm",
+    grid_mode: str = "indexed",
     interpret=None,
 ):
     """Rank-k up/down-date in a single fused ``pallas_call``.
@@ -180,6 +226,9 @@ def chol_update_fused(
       panel: row-panel (= grid tile) size.
       panel_apply: 'gemm' (MXU transform GEMM, default) or 'paper' (the
         paper's element-wise rotation chain, using the parked (c, s)).
+      grid_mode: 'indexed' (1-D grid over a scalar-prefetch index table of
+        the nP(nP+1)/2 chain steps, default) or 'rect' (the clamped
+        rectangular (nP, nP) grid, kept for comparison).
       interpret: force Pallas interpret mode (default: auto — True off-TPU).
 
     Returns:
@@ -189,6 +238,8 @@ def chol_update_fused(
         raise ValueError(f"sigma must be +1 or -1, got {sigma}")
     if panel_apply not in ("gemm", "paper"):
         raise ValueError(f"panel_apply must be 'gemm' or 'paper', got {panel_apply!r}")
+    if grid_mode not in GRID_MODES:
+        raise ValueError(f"grid_mode must be one of {GRID_MODES}, got {grid_mode!r}")
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     squeeze = V.ndim == 1
@@ -203,6 +254,7 @@ def chol_update_fused(
         sigma=sigma,
         panel=panel,
         panel_apply=panel_apply,
+        grid_mode=grid_mode,
         interpret=bool(interpret),
     )
     return out[:n, :n]
@@ -230,3 +282,17 @@ def launch_count(n: int, panel: int, *, method: str) -> int:
     if method == "pallas_2phase":
         return n_panels + (n_panels - 1)
     raise ValueError(f"unknown method {method!r}")
+
+
+def grid_steps(n: int, panel: int, *, grid_mode: str = "indexed") -> int:
+    """Grid steps per launch: the squash's win over the rectangular grid.
+
+    'indexed' walks exactly the nP(nP+1)/2 chain steps; 'rect' pays nP² with
+    ~half clamped to no-ops (empty kernel invocations, zero HBM traffic).
+    """
+    n_tiles = -(-n // panel)
+    if grid_mode == "indexed":
+        return n_tiles * (n_tiles + 1) // 2
+    if grid_mode == "rect":
+        return n_tiles * n_tiles
+    raise ValueError(f"grid_mode must be one of {GRID_MODES}, got {grid_mode!r}")

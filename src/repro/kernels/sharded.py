@@ -1,0 +1,134 @@
+"""One-launch-per-shard panel kernel for the column-sharded driver.
+
+The distributed fused composition (DESIGN.md §7) splits a sharded rank-k
+up/down-date into:
+
+* a **chain phase** (jnp, in ``repro.core.distributed``): the serial
+  diagonal recurrences, replicated from one psum-gathered stacked block per
+  panel, producing the per-panel transforms ``T^(p)``, updated diagonal
+  blocks ``D~^(p)``, and the running ``V^T`` snapshot entering each panel;
+
+* a **panel phase** (this kernel): every off-diagonal tile update
+  ``L~[p, g] = T_rr^(p) L[p, g] + T_rv^(p) V^T_in^(p)[:, g]`` — independent
+  across tiles because each row-panel of L is read in its original state
+  (row-panels are written exactly once, by their own panel step) and all
+  sequential coupling was captured in the chain-phase outputs.
+
+That independence lets ONE ``pallas_call`` per shard cover the entire
+update — one launch per shard per rank-k update, against the per-panel
+driver's launch-per-panel dispatch pattern. The grid is ``(n_panels,
+local_tiles)``; which branch a step takes (transform / diagonal writeback /
+zero fill of the strictly-lower tiles) depends on the device's global tile
+offset, fed in through ``PrefetchScalarGridSpec`` so the comparison against
+the scalar-prefetched offset is available to every grid step without an
+HBM round-trip. The chain-phase products ride as VMEM operands indexed by
+the grid's panel coordinate.
+
+``launches_traced()`` exposes the instrumentation counter benchmarks and
+tests assert the one-launch claim with (the sharded analogue of
+``repro.kernels.fused.launch_count``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Trace-time instrumentation: how many pallas_call sites this module has
+# built. Under SPMD shard_map one traced call == one launch on every shard,
+# so the per-update delta IS the launches-per-shard-per-update count.
+_LAUNCHES_TRACED = 0
+
+
+def launches_traced() -> int:
+    """Cumulative pallas_call constructions (see module docstring)."""
+    return _LAUNCHES_TRACED
+
+
+def _panel_kernel(off_ref, t_ref, d_ref, vt_ref, l_ref, l_out, *, panel):
+    p = pl.program_id(0)
+    t = pl.program_id(1)
+    g = off_ref[0] + t  # global tile index of local tile t
+
+    @pl.when(p < g)
+    def _apply():
+        T = t_ref[0]
+        R = l_ref[...]
+        vtt = vt_ref[0]
+        acc = jnp.dot(T[:panel, :panel], R,
+                      preferred_element_type=jnp.float32)
+        acc += jnp.dot(T[:panel, panel:], vtt,
+                       preferred_element_type=jnp.float32)
+        l_out[...] = acc.astype(l_out.dtype)
+
+    @pl.when(p == g)
+    def _diag():
+        # The chain phase already ran the recurrence; write its result back.
+        l_out[...] = d_ref[0]
+
+    @pl.when(p > g)
+    def _zero():
+        # Strictly-lower tiles of the column shard hold zeros by convention.
+        l_out[...] = jnp.zeros_like(l_out)
+
+
+def panel_apply_sharded(L_loc, T_stack, D_stack, vt_stack, *, tile_off,
+                        panel: int, interpret: bool):
+    """Apply a whole update's panel phase to one column shard, one launch.
+
+    Args:
+      L_loc: (n, w_loc) the device's column shard of the ORIGINAL factor.
+      T_stack: (n_panels, P+k, P+k) chain-phase transforms (replicated).
+      D_stack: (n_panels, P, P) chain-phase updated diagonal blocks.
+      vt_stack: (n_panels, k, w_loc) running V^T entering each panel.
+      tile_off: scalar int32 — this device's global tile offset (traced,
+        per-device under shard_map).
+      panel: tile size P.
+      interpret: Pallas interpret mode.
+
+    Returns:
+      (n, w_loc) the fully updated column shard.
+    """
+    global _LAUNCHES_TRACED
+    n, w_loc = L_loc.shape
+    n_panels, pk, _ = T_stack.shape
+    k = vt_stack.shape[1]
+    nt_loc = w_loc // panel
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_panels, nt_loc),
+        in_specs=[
+            pl.BlockSpec((1, pk, pk), lambda p, t, off: (p, 0, 0)),
+            pl.BlockSpec((1, panel, panel), lambda p, t, off: (p, 0, 0)),
+            pl.BlockSpec((1, k, panel), lambda p, t, off: (p, 0, t)),
+            pl.BlockSpec((panel, panel), lambda p, t, off: (p, t)),
+        ],
+        out_specs=pl.BlockSpec((panel, panel), lambda p, t, off: (p, t)),
+    )
+    _LAUNCHES_TRACED += 1
+    return pl.pallas_call(
+        functools.partial(_panel_kernel, panel=panel),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, w_loc), L_loc.dtype),
+        interpret=interpret,
+    )(jnp.reshape(tile_off, (1,)).astype(jnp.int32),
+      T_stack, D_stack, vt_stack, L_loc)
+
+
+def launch_count_sharded(n: int, panel: int, *, strategy: str) -> int:
+    """Pallas launches per shard per rank-k update, by sharded strategy.
+
+    * ``fused`` — 1: the whole panel phase is one kernel (this module).
+    * ``gemm``/``paper`` — 0: the per-panel jnp driver issues no kernels
+      (XLA ops only) — but pays one collective + one traced panel pass per
+      panel; the per-panel *kernel* analogue of that dispatch pattern is
+      ``n // panel`` launches, which is what the fusion removes.
+    """
+    if strategy == "fused":
+        return 1
+    if strategy in ("gemm", "paper"):
+        return 0
+    raise ValueError(f"unknown strategy {strategy!r}")

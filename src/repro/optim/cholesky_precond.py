@@ -25,6 +25,14 @@ well-tuned Adam while directions come from the second-order statistics.
 Dimensions larger than ``block_size`` are blocked Shampoo-style: independent
 diagonal blocks stacked in one (n_blocks, b, b) array — vmapped cholupdates,
 and a natural sharding axis for TP/EP. Non-2D params take the Adam path.
+
+The statistics are maintained as a batched ``repro.core.factor.CholFactor``
+living directly in the optimizer state: decay is ``.scale``, the sketch
+absorb is ``.update``, the window eviction is ``.downdate``, and the
+preconditioned direction is ``.solve`` — every mutation flows through the
+backend registry (``update_method='auto'`` resolves to the fused
+single-launch kernel on TPU, the oracle/GEMM drivers elsewhere), so training
+exercises exactly the engine serving uses.
 """
 from __future__ import annotations
 
@@ -33,20 +41,9 @@ from typing import Callable, Union
 import jax
 import jax.numpy as jnp
 
-from repro.core import blocked as _blocked
-from repro.core import ref as _ref
-from repro.core.solve import solve_triangular
+from repro.core.factor import CholFactor
 from repro.optim.adamw import _lr_at
 from repro.optim.base import Optimizer
-
-
-def _chol_update(L, V, sigma, method):
-    if method == "reference":
-        return _ref.chol_update_ref(L, V, sigma=sigma)
-    panel = min(256, L.shape[0])
-    return _blocked.chol_update_blocked(
-        L, V, sigma=sigma, panel=panel, strategy="gemm"
-    )
 
 
 def _precond_side(p_shape, max_precond_dim, rank, block_size):
@@ -91,8 +88,12 @@ def cholesky_precond(
             d = min(p.shape)
             b = min(block_size, d)
             nb = d // b
-            c0 = jnp.tile(
-                jnp.sqrt(eps) * jnp.eye(b, dtype=jnp.float32), (nb, 1, 1)
+            # The maintained statistics ARE a CholFactor: a batched factor
+            # of eps*I per diagonal block, every mutation routed through the
+            # backend registry (fused kernel on TPU, oracle/GEMM elsewhere).
+            c0 = CholFactor.identity(
+                b, scale=eps, batch=nb, backend=update_method,
+                panel=min(256, b),
             )
             state = {"c": c0}
             if window > 0:
@@ -126,18 +127,18 @@ def cholesky_precond(
             gmat = g32 if side == "left" else g32.T  # (d, other)
             d, other = gmat.shape
             b = min(block_size, d)
-            meth = update_method
-            if meth == "auto":
-                meth = "reference" if b <= 128 else "gemm"
 
             om = jax.random.normal(
                 jax.random.fold_in(key, path_idx), (other, rank), jnp.float32
             ) / jnp.sqrt(jnp.asarray(rank, jnp.float32))
             sketch = gmat @ om  # (d, k)
 
-            c = fac["c"] * jnp.sqrt(jnp.asarray(beta, jnp.float32))
+            # Exponential decay is exact factor scaling; the new sketch is a
+            # rank-k update; the expiring sketch a rank-k downdate — all on
+            # the ONE maintained CholFactor, never refactorizing.
+            c = fac["c"].scale(jnp.sqrt(jnp.asarray(beta, jnp.float32)))
             vb = sketch.reshape(d // b, b, rank)
-            c = jax.vmap(lambda ci, vi: _chol_update(ci, vi, 1, meth))(c, vb)
+            c = c.update(vb)
             fac_new = dict(fac)
             if window > 0:
                 slot = (step - 1) % window
@@ -146,20 +147,16 @@ def cholesky_precond(
                 )
                 scale = jnp.asarray(beta, jnp.float32) ** (window / 2.0)
                 ob = (old * scale).reshape(d // b, b, rank)
-                c = jax.vmap(lambda ci, vi: _chol_update(ci, vi, -1, meth))(c, ob)
+                c = c.downdate(ob)
                 fac_new["ring"] = jax.lax.dynamic_update_index_in_dim(
                     fac["ring"], sketch, slot, axis=0
                 )
             fac_new["c"] = c
 
-            # direction = A^{-1} gmat via two triangular solves per block.
+            # direction = A^{-1} gmat: two triangular solves per block
+            # against the maintained factor.
             gb = gmat.reshape(d // b, b, other)
-
-            def solve_block(ci, gi):
-                y = solve_triangular(ci, gi, trans=True)
-                return solve_triangular(ci, y, trans=False)
-
-            pdir = jax.vmap(solve_block)(c, gb).reshape(d, other)
+            pdir = c.solve(gb).reshape(d, other)
             if side == "right":
                 pdir = pdir.T
             # Grafting: second-order direction, Adam step norm.

@@ -39,6 +39,25 @@ else:  # JAX <= 0.4.x
     from jax.experimental.shard_map import shard_map  # noqa: F401
 
 
+def shard_map_norep(f, *, mesh, in_specs, out_specs):
+    """``shard_map`` with the replication checker disabled.
+
+    ``pallas_call`` has no replication rule, so any shard_map body that
+    launches a kernel (the distributed fused path, DESIGN.md §7) must turn
+    the checker off. The kwarg was renamed ``check_rep`` -> ``check_vma``
+    across JAX versions; per the compat policy we feature-detect by calling,
+    never by version-parsing, and fall back to the bare call on versions
+    where the checker does not exist at all.
+    """
+    for kw in ({"check_rep": False}, {"check_vma": False}, {}):
+        try:
+            return shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+        except TypeError:
+            continue
+    raise TypeError("shard_map rejected both check_rep and check_vma")
+
+
 def mesh_axis_types_kwargs(n_axes: int) -> dict:
     """kwargs marking all ``n_axes`` mesh axes as Auto, where supported.
 

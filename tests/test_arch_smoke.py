@@ -5,6 +5,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# ~10-25s of XLA compile per architecture: the model-zoo integration tier
+# (scripts/test.sh --fast skips it; the core numerics tier stays).
+pytestmark = pytest.mark.slow
+
 import repro.optim as optim
 from repro.configs import ARCHS
 from repro.models import (

@@ -124,6 +124,34 @@ def test_batched_rank1_2d_input_and_validation():
         chol_update_batched(Lb, Vb[:, : n // 2])  # n mismatch
 
 
+@pytest.mark.parametrize("grid_mode", ["indexed", "rect"])
+@pytest.mark.parametrize("sigma", [1, -1])
+def test_fused_grid_modes_agree(grid_mode, sigma):
+    """The 1-D scalar-prefetch indexed grid and the clamped rectangular grid
+    are the same algorithm: bitwise-comparable results, fewer grid steps."""
+    n, k, panel = 96, 4, 32
+    L, V = make_problem(n, k, seed=53)
+    if sigma == -1:
+        L = _downdatable(L, V)
+    out = F.chol_update_fused(L, V, sigma=sigma, panel=panel,
+                              grid_mode=grid_mode, interpret=True)
+    np.testing.assert_allclose(
+        out, ref.chol_update_ref(L, V, sigma=sigma),
+        atol=tol_for(jnp.float32, n),
+    )
+    with pytest.raises(ValueError):
+        F.chol_update_fused(L, V, grid_mode="nope", interpret=True)
+
+
+def test_grid_steps_accounting():
+    # The squash satellite, as arithmetic: triangular vs rectangular steps.
+    assert F.grid_steps(4096, 256, grid_mode="indexed") == 16 * 17 // 2
+    assert F.grid_steps(4096, 256, grid_mode="rect") == 16 * 16
+    assert F.grid_steps(100, 256, grid_mode="indexed") == 1
+    with pytest.raises(ValueError):
+        F.grid_steps(4096, 256, grid_mode="nope")
+
+
 def test_launch_count_accounting():
     # The tentpole claim, as arithmetic: one launch regardless of n/panel.
     assert F.launch_count(4096, 256, method="fused") == 1

@@ -44,6 +44,7 @@ def test_param_shapes_and_axes_structure():
     assert shapes["embed"]["tokens"].shape == (cfg.vocab_padded, cfg.d_model)
 
 
+@pytest.mark.slow
 def test_train_driver_end_to_end(tmp_path):
     from repro.launch.train import main as train_main
 
@@ -71,6 +72,7 @@ def test_train_driver_end_to_end(tmp_path):
     assert losses2 == []
 
 
+@pytest.mark.slow
 def test_serve_driver_generates():
     from repro.launch.serve import generate
     from repro.models import init_model, split_params
@@ -84,6 +86,7 @@ def test_serve_driver_generates():
     assert tps > 0
 
 
+@pytest.mark.slow
 def test_grad_accum_matches_single_batch():
     """grad_accum=2 must give the same update as accum=1 (linearity)."""
     import jax

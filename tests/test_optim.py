@@ -64,7 +64,7 @@ def test_cholesky_precond_factors_stay_valid():
         "cholesky_precond", 0.03, rank=4, block_size=32, window=4
     )
     _, state, _, _ = run_steps(opt, loss_fn, params, 30)
-    c = state["factors"]["w"]["c"]
+    c = state["factors"]["w"]["c"].data  # the maintained CholFactor's array
     assert bool(jnp.all(jnp.stack([jnp.all(jnp.diagonal(ci) > 0) for ci in c])))
     for ci in c:
         assert float(jnp.max(jnp.abs(jnp.tril(ci, -1)))) < 1e-5
@@ -83,12 +83,38 @@ def test_cholesky_precond_window_tracks_recent_stats():
     state = opt.init(params)
     for g in g_seq:
         _, state = opt.update({"w": g}, state, params)
-    C = state["factors"]["w"]["c"][0]
+    C = state["factors"]["w"]["c"].data[0]
     A = C.T @ C
     # Ring buffer holds exactly the last W sketches.
     ring = state["factors"]["w"]["ring"]
     A_expected = 1e-2 * jnp.eye(d) + sum(ring[i] @ ring[i].T for i in range(W))
     np.testing.assert_allclose(np.asarray(A), np.asarray(A_expected), rtol=2e-3, atol=2e-4)
+
+
+def test_cholesky_precond_fused_backend_in_training():
+    """The maintained CholFactor routes through the registry: the fused
+    single-launch kernel (interpret mode here) runs inside the training
+    step, matching the reference backend's statistics."""
+    rng = np.random.default_rng(7)
+    d, other, k = 32, 48, 4
+    params = {"w": jnp.zeros((d, other), jnp.float32)}
+    grads = {"w": jnp.asarray(rng.normal(size=(d, other)), jnp.float32)}
+    outs = {}
+    for backend in ("fused", "reference"):
+        opt = optim.get_optimizer(
+            "cholesky_precond", 0.01, rank=k, block_size=d,
+            update_method=backend,
+        )
+        state = opt.init(params)
+        fac = state["factors"]["w"]["c"]
+        assert fac.backend == backend
+        for _ in range(2):
+            upd, state = opt.update(grads, state, params)
+        outs[backend] = (upd["w"], state["factors"]["w"]["c"].data)
+    np.testing.assert_allclose(outs["fused"][0], outs["reference"][0],
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(outs["fused"][1], outs["reference"][1],
+                               rtol=1e-4, atol=1e-4)
 
 
 def test_adamw_bf16_state_dtype():
