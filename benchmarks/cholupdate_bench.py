@@ -23,6 +23,12 @@ Derived columns reproduce the paper's claims: the n^2 scaling exponent, the
 panelled-vs-serial speedup and its crossover n, rank-16-vs-16x-rank-1
 batching gain, and the error metric; plus the fused-vs-cascade launch and
 wall-clock deltas and the batched (serving) throughput.
+
+The ``dtypes`` axis (snapshot ``--dtype``, DESIGN.md §8) adds per-storage-
+dtype rows for the gemm and fused paths recording bytes-per-update — the
+bandwidth-bound quantity the paper says dominates — alongside wall-clock:
+bf16 panels move exactly half the bytes of fp32 while the fp32 rotation
+state costs no HBM traffic at all.
 """
 from __future__ import annotations
 
@@ -32,7 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CholFactor, ref
+from repro.core import CholFactor, Precision, ref
 from repro.kernels import fused as fused_k
 from repro.kernels import ops as kernel_ops
 
@@ -61,18 +67,19 @@ def _reps_for(n):
     return 1 if n >= 2048 else 3
 
 
-def _factor_update(backend, *, panel=256, interpret=None):
+def _factor_update(backend, *, panel=256, interpret=None, precision=None):
     """Object-API update closure: the path every production consumer runs."""
 
     def fn(L, V, sigma):
         f = CholFactor.from_factor(L, panel=panel, backend=backend,
-                                   interpret=interpret)
+                                   interpret=interpret, precision=precision)
         return (f.update(V) if sigma == 1 else f.downdate(V)).data
 
     return fn
 
 
-def run(csv_rows, *, ns=(512, 1024, 2048, 4096), ks=(16, 1), quick=False):
+def run(csv_rows, *, ns=(512, 1024, 2048, 4096), ks=(16, 1), quick=False,
+        dtypes=("float32",)):
     if quick:
         ns = (256, 512)
     methods = {
@@ -193,6 +200,34 @@ def run(csv_rows, *, ns=(512, 1024, 2048, 4096), ks=(16, 1), quick=False):
              f"grid_steps={gs_r}->{gs_i} "
              f"rect_vs_indexed={t_rect / t_idx:.2f}x")
         )
+
+    # --- precision axis: storage dtype vs wall-clock AND bytes-per-update --
+    # The paper calls the problem bandwidth-bound, so the decisive column is
+    # bytes moved per update (exact, from the fused kernel's tile
+    # accounting), recorded alongside wall-clock. Off-TPU interpret-mode
+    # timing is dispatch-bound; the bytes column is hardware-independent.
+    prec_n = 256 if quick else 512
+    prec_panel = 64 if quick else 128
+    kp = 16
+    Lp, Vp = make_problem(prec_n, kp, seed=prec_n + kp)
+    for dtype in dtypes:
+        precision = None if dtype in ("float32", "f32") else dtype
+        policy = Precision.parse(precision)
+        storage = jnp.float32 if policy is None else policy.storage
+        bytes_upd = fused_k.bytes_per_update(prec_n, prec_panel, kp,
+                                             storage_dtype=storage)
+        for backend in ("gemm", "fused"):
+            upd = _factor_update(backend, panel=prec_panel,
+                                 interpret=interpret, precision=precision)
+            t_p, out_p = time_call(lambda L, V: upd(L, V, 1), Lp, Vp, reps=2)
+            err_p = float(ref.modify_error(
+                jnp.asarray(out_p, jnp.float32), Lp, Vp, sigma=1))
+            csv_rows.append(
+                (f"cholupdate/precision/{backend}/{dtype}/n{prec_n}/k{kp}",
+                 t_p * 1e6,
+                 f"err={err_p:.2e} bytes_per_update={bytes_upd} "
+                 f"out_dtype={jnp.asarray(out_p).dtype}")
+            )
 
     # --- batched serving workload: B concurrent per-user updates -----------
     Bsz, nb, kb, panel_b = (4, 128, 8, 32) if quick else (8, 256, 8, 64)

@@ -15,6 +15,7 @@ recorded ``backend`` field.
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import subprocess
 import time
@@ -48,6 +49,10 @@ def main() -> None:
                     help="paper-scale sizes (default: quick)")
     ap.add_argument("--only", type=str, default="cholupdate,kernels",
                     help="comma-separated suite subset (see benchmarks.run)")
+    ap.add_argument("--dtype", type=str, default="float32,bfloat16",
+                    help="comma-separated storage-dtype axis for suites that "
+                         "support it (DESIGN.md §8): per-dtype rows record "
+                         "bytes-per-update alongside wall-clock")
     args = ap.parse_args()
 
     import jax
@@ -65,9 +70,14 @@ def main() -> None:
         "distributed": distributed_bench.run,
         "optimizer": optimizer_bench.run,
     }
+    dtypes = tuple(d for d in args.dtype.split(",") if d)
     rows = []
     for name in args.only.split(","):
-        suites[name](rows, quick=not args.full)
+        fn = suites[name]
+        if "dtypes" in inspect.signature(fn).parameters:
+            fn(rows, quick=not args.full, dtypes=dtypes)
+        else:
+            fn(rows, quick=not args.full)
 
     record = {
         "ts": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
@@ -75,6 +85,7 @@ def main() -> None:
         "backend": jax.default_backend(),
         "quick": not args.full,
         "suites": args.only,
+        "dtypes": list(dtypes),
         "rows": [
             {"name": n, "us": round(us, 1), "derived": derived}
             for n, us, derived in rows

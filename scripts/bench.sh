@@ -6,6 +6,9 @@
 #   scripts/bench.sh              # quick sizes (CI-friendly)
 #   scripts/bench.sh --full       # paper-scale sizes
 #   scripts/bench.sh --only cholupdate,kernels
+#   scripts/bench.sh --dtype float32,bfloat16   # storage-dtype axis
+#                                 # (the default: per-dtype rows with
+#                                 # bytes-per-update land in the snapshot)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

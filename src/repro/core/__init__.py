@@ -16,6 +16,7 @@ from repro.core.api import (
 )
 from repro.core.blocked import chol_update_blocked
 from repro.core.factor import CholFactor, resolve_backend_for
+from repro.core.precision import Precision
 from repro.core.ref import chol_update_dense, chol_update_ref, modify_error
 from repro.core.solve import (
     chol_factor,
@@ -29,6 +30,7 @@ from repro.core.solve import (
 __all__ = [
     "backends",
     "CholFactor",
+    "Precision",
     "resolve_backend_for",
     "chol_update",
     "chol_update_batched",

@@ -16,17 +16,30 @@
 * ``sharded``     — column-sharded multi-device driver composing the fused
                     kernel, one launch per shard (DESIGN.md §7); pass
                     ``mesh=`` (and optionally ``axis=``).
-* ``auto``        — heuristic (``backends.resolve``): fused on a
-                    Pallas-capable device or under explicit interpret mode,
-                    reference for tiny n, gemm otherwise.
+* ``auto``        — heuristic (``backends.resolve``): fused on TPU or under
+                    explicit interpret mode, pallas_gemm on GPU (Triton —
+                    the fused kernel's grid spec is Mosaic-only), reference
+                    for tiny n, gemm otherwise.
+
+``precision`` is the storage/accum dtype policy (DESIGN.md §8): a
+``repro.core.precision.Precision``, a preset string ('bf16', 'f32', ...),
+or None (legacy: compute and store in the input dtype). Under 'bf16' the
+L-tiles and the running ``V^T`` are stored in bfloat16 — halving the HBM
+bytes of this bandwidth-bound problem — while the diagonal recurrence, the
+rotation state ``(c, s)``/``T`` and all GEMM accumulation stay fp32. The
+returned factor has the policy's storage dtype. Mixed-dtype inputs are
+pinned: ``V`` is always cast to ``L``'s dtype before dispatch, on every
+backend (no silent promotion of the factor).
 
 Every path is differentiable: dispatch runs through the Murray (2016)
-derivative rules in ``repro.core.autodiff``, so ``jax.grad``/``jax.jvp`` of
-a maintained factor never trace the underlying recurrence or kernel.
+derivative rules in ``repro.core.autodiff`` (tangents/cotangents computed
+in fp32 regardless of storage dtype), so ``jax.grad``/``jax.jvp`` of a
+maintained factor never trace the underlying recurrence or kernel.
 
 ``chol_update_batched`` / ``chol_downdate_batched`` vmap any single-device
 backend over stacked ``(B, n, n)`` factors — the serving workload of many
-concurrent per-user updates.
+concurrent per-user updates. Both default to ``method='auto'`` and resolve
+the heuristic ONCE per batch (same funnel as the single-factor path).
 
 The stateful-factor object API (update/downdate/solve/logdet on one carried
 value) lives in ``repro.core.factor.CholFactor``; these functions remain as
@@ -34,26 +47,71 @@ the thin functional face over the same registry.
 """
 from __future__ import annotations
 
-import functools
+import collections
+import threading
 from typing import Optional
 
 import jax
 
 from repro.core import autodiff, backends
+from repro.core.precision import Precision
+
+# ---------------------------------------------------------------------------
+# Impl cache. One impl closure per (method, panel, interpret, precision,
+# opts) so the custom_jvp wrapper sees a stable hashable callable (warm jit
+# caches). Two leak hazards are handled here:
+#
+# * the cache is BOUNDED (LRU): a long-lived serving process that cycles
+#   through many configurations must not retain every closure forever;
+# * mesh-valued opts are keyed by identity-safe METADATA (axis names, shape,
+#   device ids) rather than the Mesh object itself, so two equal meshes
+#   built at different times share one entry instead of each pinning a
+#   distinct closure (and its jit cache) — the old unbounded lru_cache
+#   keyed on the raw object retained every mesh ever passed.
+# ---------------------------------------------------------------------------
+
+_IMPL_CACHE_MAX = 64
+_impl_cache: "collections.OrderedDict" = collections.OrderedDict()
+_impl_lock = threading.Lock()
 
 
-@functools.lru_cache(maxsize=None)
+def _opt_key(value):
+    """A hashable, identity-safe cache key for one backend option value."""
+    if hasattr(value, "axis_names") and hasattr(value, "devices"):
+        # Mesh-like: key by what determines the computation, not object id.
+        devs = tuple(id(d) for d in value.devices.flat)
+        return ("mesh", tuple(value.axis_names),
+                tuple(value.shape[a] for a in value.axis_names), devs)
+    return value
+
+
 def _cached_impl(method: str, panel: int, interpret: Optional[bool],
-                 opts_items: tuple):
-    """One impl closure per (method, panel, interpret, opts) so the
-    custom_jvp wrapper sees a stable hashable callable (warm jit caches)."""
-    opts = dict(opts_items)
+                 precision: Optional[Precision], opts: dict):
+    key = (method, panel, interpret, precision,
+           tuple((k, _opt_key(v)) for k, v in sorted(opts.items())))
+    # Get-or-create under ONE lock hold: two threads racing the same first
+    # call must receive the SAME closure (a per-thread duplicate would
+    # defeat the stable-callable contract and double-trace under jit).
+    with _impl_lock:
+        impl = _impl_cache.get(key)
+        if impl is not None:
+            _impl_cache.move_to_end(key)
+            return impl
 
-    def impl(L, V, sigma):
-        return backends.dispatch(L, V, sigma=sigma, method=method,
-                                 panel=panel, interpret=interpret, **opts)
+        def impl(L, V, sigma):
+            return backends.dispatch(L, V, sigma=sigma, method=method,
+                                     panel=panel, interpret=interpret,
+                                     precision=precision, **opts)
 
-    return impl
+        _impl_cache[key] = impl
+        while len(_impl_cache) > _IMPL_CACHE_MAX:
+            _impl_cache.popitem(last=False)
+        return impl
+
+
+def impl_cache_len() -> int:
+    """Current impl-cache size (bounded by ``_IMPL_CACHE_MAX``); for tests."""
+    return len(_impl_cache)
 
 
 def chol_update(
@@ -64,18 +122,24 @@ def chol_update(
     method: str = "auto",
     panel: int = 256,
     interpret: Optional[bool] = None,
+    precision=None,
     **opts,
 ):
     """Rank-k up/down-date of the upper Cholesky factor L (A = L^T L).
 
     Args:
       L: (n, n) upper-triangular factor with positive diagonal.
-      V: (n, k) or (n,) modification matrix.
+      V: (n, k) or (n,) modification matrix; cast to ``L.dtype`` if it
+        differs (the factor's dtype is never silently promoted).
       sigma: +1 for update (A + V V^T), -1 for downdate (A - V V^T).
       method: backend name or 'auto', see module docstring.
       panel: row-panel size for the blocked paths.
-      interpret: force Pallas interpret mode (defaults to auto-detect: True on
-        CPU, False on TPU).
+      interpret: force Pallas interpret mode (defaults to auto-detect per
+        kernel: the per-panel kernels compile on TPU and GPU, the fused
+        kernel compiles on TPU only — see ``backends.default_interpret``).
+      precision: storage/accum dtype policy ('bf16', a ``Precision``, or
+        None = legacy single-dtype behaviour). The result carries the
+        storage dtype.
       **opts: backend-specific options (e.g. ``mesh=``/``axis=`` for
         'sharded', ``panel_apply=`` for 'fused').
 
@@ -90,7 +154,12 @@ def chol_update(
         raise ValueError(f"sigma must be +1 or -1, got {sigma}")
     if V.ndim == 1:
         V = V[:, None]
-    impl = _cached_impl(method, panel, interpret, tuple(sorted(opts.items())))
+    if V.dtype != L.dtype:
+        # Pinned mixed-dtype behaviour (tests/test_factor.py): the factor's
+        # dtype wins on every backend; no implicit jnp promotion of L.
+        V = V.astype(L.dtype)
+    precision = Precision.parse(precision)
+    impl = _cached_impl(method, panel, interpret, precision, opts)
     return autodiff.diffable_update(impl, sigma, L, V)
 
 
@@ -99,9 +168,10 @@ def chol_update_batched(
     V,
     *,
     sigma: int = 1,
-    method: str = "fused",
+    method: str = "auto",
     panel: int = 256,
     interpret: Optional[bool] = None,
+    precision=None,
     **opts,
 ):
     """Batched rank-k up/down-date over stacked factors (one vmapped launch).
@@ -111,12 +181,17 @@ def chol_update_batched(
     per user). For the ``fused`` method vmap folds the batch into the kernel
     grid, so B updates still cost a single device launch.
 
+    ``method`` defaults to ``'auto'`` — the SAME heuristic as the
+    single-factor path — and is resolved once here for the whole batch, so
+    the batched serving path can no longer silently bypass the device-kind
+    routing (the old hard default of 'fused' did).
+
     Args:
       L: (B, n, n) stacked upper-triangular factors.
       V: (B, n, k) — or (B, n), broadcast to rank 1 — stacked modifications.
-      sigma, method, panel, interpret, **opts: as in ``chol_update`` (shared
-        across the batch; per-element sigma would break the single-kernel
-        grid).
+      sigma, method, panel, interpret, precision, **opts: as in
+        ``chol_update`` (shared across the batch; per-element sigma would
+        break the single-kernel grid).
 
     Returns:
       (B, n, n) stacked updated factors.
@@ -131,11 +206,14 @@ def chol_update_batched(
         )
     if method == "sharded":
         raise ValueError("method='sharded' does not support the batched API")
+    # Resolve the heuristic ONCE for the batch (not per vmapped element).
+    method = backends.resolve(method, n=L.shape[-1], panel=panel,
+                              interpret=interpret)
 
     def one(l, v):
         return chol_update(
             l, v, sigma=sigma, method=method, panel=panel, interpret=interpret,
-            **opts,
+            precision=precision, **opts,
         )
 
     return jax.vmap(one)(L, V)

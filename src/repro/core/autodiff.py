@@ -58,11 +58,23 @@ def _diffable_update_jvp(impl, sigma, primals, tangents):
     L, V = primals
     dL, dV = tangents
     L_new = diffable_update(impl, sigma, L, V)
+    # Tangent/cotangent discipline under low-precision storage (DESIGN.md
+    # §8): the Murray rule runs two triangular solves against the output
+    # factor — solves amplify rounding, so the whole tangent map computes in
+    # at least fp32 even when the primal factor is stored bf16. fp64
+    # primals keep fp64 (promote, never truncate). Only the returned
+    # tangent is downcast, because custom_jvp requires tangent aval ==
+    # primal-out aval. The VJP is the transpose of this (linear) map, so
+    # cotangents inherit the same fp32 arithmetic.
+    acc = jnp.promote_types(L_new.dtype, jnp.float32)
+    Lh, Vh = L.astype(acc), V.astype(acc)
+    dLh, dVh = dL.astype(acc), dV.astype(acc)
+    Lnh = L_new.astype(acc)
     # dA~ = d(L^T L) + sigma d(V V^T), symmetric by construction.
-    dA = dL.T @ L + L.T @ dL + sigma * (dV @ V.T + V @ dV.T)
+    dA = dLh.T @ Lh + Lh.T @ dLh + sigma * (dVh @ Vh.T + Vh @ dVh.T)
     # M = L~^{-T} dA~ L~^{-1} via two triangular solves against the output
     # factor (both linear in the tangent, hence transposable for the VJP).
-    X = jax.scipy.linalg.solve_triangular(L_new, dA, trans=1, lower=False)
-    M = jax.scipy.linalg.solve_triangular(L_new, X.T, trans=1, lower=False).T
-    dL_new = _psi(M) @ L_new
-    return L_new, dL_new
+    X = jax.scipy.linalg.solve_triangular(Lnh, dA, trans=1, lower=False)
+    M = jax.scipy.linalg.solve_triangular(Lnh, X.T, trans=1, lower=False).T
+    dL_new = _psi(M) @ Lnh
+    return L_new, dL_new.astype(L_new.dtype)

@@ -23,6 +23,28 @@ from typing import Callable, Dict, Optional, Tuple
 
 import jax
 
+from repro.core.precision import Precision
+
+# Device kinds Pallas can lower kernels for: TPU (Mosaic) and GPU (Triton).
+# The paper's target hardware is the GPU — 'auto' routing must not treat
+# TPU as the only kernel-capable device. The fused kernel is the exception:
+# its PrefetchScalarGridSpec + pltpu.VMEM scratch are Mosaic-only, so on
+# GPU the Pallas path is the per-panel GEMM kernel (plain pallas_call +
+# BlockSpecs, Triton-lowerable).
+PALLAS_DEVICE_KINDS = ("tpu", "gpu", "cuda", "rocm")
+MOSAIC_DEVICE_KINDS = ("tpu",)
+
+
+def default_interpret(*, mosaic_only: bool = False) -> bool:
+    """Interpret-mode auto-detect, shared by every kernel entry point.
+
+    ``mosaic_only=True`` is for kernels using TPU-specific Pallas features
+    (the fused kernel): compile on TPU, interpret elsewhere. The default
+    covers the per-panel kernels, which also compile on GPU via Triton.
+    """
+    kinds = MOSAIC_DEVICE_KINDS if mosaic_only else PALLAS_DEVICE_KINDS
+    return jax.default_backend().lower() not in kinds
+
 
 @dataclasses.dataclass(frozen=True)
 class Backend:
@@ -33,9 +55,16 @@ class Backend:
     kind: str  # 'serial' | 'blocked' | 'pallas' | 'collective'
     description: str
 
-    def __call__(self, L, V, *, sigma, panel, interpret, **opts):
+    def __call__(self, L, V, *, sigma, panel, interpret, precision=None,
+                 **opts):
+        precision = Precision.parse(precision)
+        if precision is not None:
+            # Storage casts happen at the funnel: every backend sees inputs
+            # already in the policy's storage dtype, and returns it.
+            L = precision.cast_storage(L)
+            V = precision.cast_storage(V)
         return self.fn(L, V, sigma=sigma, panel=panel, interpret=interpret,
-                       **opts)
+                       precision=precision, **opts)
 
 
 _REGISTRY: Dict[str, Backend] = {}
@@ -83,29 +112,37 @@ def resolve(
 ) -> str:
     """Map ``method`` (possibly 'auto') to a concrete backend name.
 
-    The 'auto' heuristic prefers the single-launch fused kernel whenever a
-    Pallas-capable device is present (TPU) or interpret mode was explicitly
-    requested; otherwise it falls back to the pure-JAX paths: the serial
-    oracle for problems under two panels (where panelling buys nothing) and
-    the transform-GEMM driver beyond.
+    The 'auto' heuristic prefers a Pallas kernel whenever a Pallas-capable
+    device is present or interpret mode was explicitly requested: the
+    single-launch fused kernel on TPU (and under interpret — its
+    PrefetchScalarGridSpec/pltpu scratch are Mosaic-only), the per-panel
+    GEMM kernel on GPU (Triton lowering; the paper's actual target
+    hardware, which previously fell all the way back to the jnp gemm path
+    and never launched a kernel). Otherwise the pure-JAX paths: the serial
+    oracle for problems under two panels (where panelling buys nothing)
+    and the transform-GEMM driver beyond.
     """
     if method != "auto":
         get(method)  # validate
         return method
     if device_kind is None:
         device_kind = jax.default_backend()
-    if device_kind == "tpu" or interpret:
+    device_kind = device_kind.lower()
+    if device_kind in MOSAIC_DEVICE_KINDS or interpret:
         return "fused"
+    if device_kind in PALLAS_DEVICE_KINDS:
+        return "pallas_gemm"
     if n < 2 * panel:
         return "reference"
     return "gemm"
 
 
-def dispatch(L, V, *, sigma, method, panel, interpret, **opts):
+def dispatch(L, V, *, sigma, method, panel, interpret, precision=None,
+             **opts):
     """Resolve + run: the single funnel every consumer's update flows through."""
     name = resolve(method, n=L.shape[0], panel=panel, interpret=interpret)
     return get(name)(L, V, sigma=sigma, panel=panel, interpret=interpret,
-                     **opts)
+                     precision=precision, **opts)
 
 
 # ---------------------------------------------------------------------------
@@ -116,71 +153,80 @@ def dispatch(L, V, *, sigma, method, panel, interpret, **opts):
 
 @register("reference", kind="serial",
           description="serial hyperbolic sweeps, O(k n^2) (paper Alg. 1)")
-def _reference(L, V, *, sigma, panel, interpret, **opts):
+def _reference(L, V, *, sigma, panel, interpret, precision=None, **opts):
     del panel, interpret, opts
     from repro.core import ref
 
-    return ref.chol_update_ref(L, V, sigma=sigma)
+    if precision is None:
+        return ref.chol_update_ref(L, V, sigma=sigma)
+    # The serial oracle has no tile structure: the whole sweep runs in the
+    # accumulation dtype, and only the returned factor is storage-typed.
+    out = ref.chol_update_ref(precision.up(L), precision.up(V), sigma=sigma)
+    return precision.down(out, like=L)
 
 
 @register("paper", kind="blocked",
           description="panelled, element-wise panel apply (paper §4)")
-def _paper(L, V, *, sigma, panel, interpret, **opts):
+def _paper(L, V, *, sigma, panel, interpret, precision=None, **opts):
     del interpret, opts
     from repro.core import blocked
 
     return blocked.chol_update_blocked(L, V, sigma=sigma, panel=panel,
-                                       strategy="paper")
+                                       strategy="paper", precision=precision)
 
 
 @register("gemm", kind="blocked",
           description="panelled, transform-GEMM panel apply (TPU-native)")
-def _gemm(L, V, *, sigma, panel, interpret, **opts):
+def _gemm(L, V, *, sigma, panel, interpret, precision=None, **opts):
     del interpret, opts
     from repro.core import blocked
 
     return blocked.chol_update_blocked(L, V, sigma=sigma, panel=panel,
-                                       strategy="gemm")
+                                       strategy="gemm", precision=precision)
 
 
 @register("pallas", kind="pallas",
           description="per-panel Pallas kernels, element-wise panel apply")
-def _pallas(L, V, *, sigma, panel, interpret, **opts):
+def _pallas(L, V, *, sigma, panel, interpret, precision=None, **opts):
     from repro.kernels import ops as kernel_ops
 
     return kernel_ops.chol_update_pallas(L, V, sigma=sigma, panel=panel,
                                          strategy="paper",
-                                         interpret=interpret, **opts)
+                                         interpret=interpret,
+                                         precision=precision, **opts)
 
 
 @register("pallas_gemm", kind="pallas",
           description="per-panel Pallas kernels, MXU GEMM panel apply")
-def _pallas_gemm(L, V, *, sigma, panel, interpret, **opts):
+def _pallas_gemm(L, V, *, sigma, panel, interpret, precision=None, **opts):
     from repro.kernels import ops as kernel_ops
 
     return kernel_ops.chol_update_pallas(L, V, sigma=sigma, panel=panel,
                                          strategy="gemm",
-                                         interpret=interpret, **opts)
+                                         interpret=interpret,
+                                         precision=precision, **opts)
 
 
 @register("fused", kind="pallas",
           description="single-launch pipelined Pallas kernel (DESIGN.md §5)")
-def _fused(L, V, *, sigma, panel, interpret, **opts):
+def _fused(L, V, *, sigma, panel, interpret, precision=None, **opts):
     from repro.kernels import fused as kernel_fused
 
     return kernel_fused.chol_update_fused(L, V, sigma=sigma, panel=panel,
-                                          interpret=interpret, **opts)
+                                          interpret=interpret,
+                                          precision=precision, **opts)
 
 
 @register("sharded", kind="collective",
           description="column-sharded multi-device driver composing the "
                       "fused kernel (DESIGN.md §4+§7); requires mesh=")
-def _sharded(L, V, *, sigma, panel, interpret, mesh=None, axis="model",
-             **opts):
+def _sharded(L, V, *, sigma, panel, interpret, precision=None, mesh=None,
+             axis="model", **opts):
     if mesh is None:
         raise ValueError("method='sharded' requires a mesh= argument")
     from repro.core import distributed
 
     return distributed.chol_update_sharded(L, V, sigma=sigma, mesh=mesh,
                                            axis=axis, panel=panel,
-                                           interpret=interpret, **opts)
+                                           interpret=interpret,
+                                           precision=precision, **opts)

@@ -26,12 +26,13 @@ Both agree with ``repro.core.ref`` to roundoff and are tested as such.
 from __future__ import annotations
 
 import functools
-from typing import Literal
+from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import ref as _ref
+from repro.core.precision import Precision
 
 Strategy = Literal["paper", "gemm"]
 
@@ -124,15 +125,21 @@ def panel_apply_paper(R, vt, c, s, sigma):
 
 
 def panel_apply_gemm(R, vt, T):
-    """GEMM panel apply: one (P+k, P+k) @ (P+k, w) matmul on the MXU."""
+    """GEMM panel apply: one (P+k, P+k) @ (P+k, w) matmul on the MXU.
+
+    Accumulates in at least fp32; wider operands (an f64 accum policy, or
+    legacy f64 inputs) keep their own width — promote, never truncate.
+    """
+    acc_t = jnp.promote_types(jnp.result_type(R.dtype, T.dtype), jnp.float32)
     S = jnp.concatenate([R, vt], axis=0)
-    S = jnp.dot(T, S, preferred_element_type=jnp.float32).astype(R.dtype)
+    S = jnp.dot(T, S, preferred_element_type=acc_t).astype(R.dtype)
     P = R.shape[0]
     return S[:P], S[P:]
 
 
 @functools.partial(
-    jax.jit, static_argnames=("sigma", "panel", "strategy", "apply_fn")
+    jax.jit,
+    static_argnames=("sigma", "panel", "strategy", "apply_fn", "precision"),
 )
 def chol_update_blocked(
     L,
@@ -142,18 +149,32 @@ def chol_update_blocked(
     panel: int = 256,
     strategy: Strategy = "gemm",
     apply_fn=None,
+    precision: Optional[Precision] = None,
 ):
     """Panelled rank-k up/down-date. See module docstring.
 
     ``apply_fn`` optionally overrides the off-diagonal panel apply with a
     custom implementation of signature ``(R, vt, c, s, T, sigma) -> (R, vt)``
     — this is the hook the Pallas kernels plug into.
+
+    ``precision`` (DESIGN.md §8) mirrors the fused kernel's storage/accum
+    split so reference comparisons are apples-to-apples: ``L`` and the
+    running ``V^T`` are STORED in the storage dtype between panel steps
+    (each downcast loses exactly the bits the kernel's HBM tiles lose),
+    while the diagonal recurrence and the panel applies COMPUTE in the
+    accumulation dtype — the rotation state ``(c, s)`` and the transform
+    ``T`` never leave it.
     """
     if sigma not in (1, -1):
         raise ValueError(f"sigma must be +1 or -1, got {sigma}")
     squeeze = V.ndim == 1
     if squeeze:
         V = V[:, None]
+    if precision is not None:
+        L = precision.cast_storage(L)
+        V = precision.cast_storage(V)
+    up = (lambda x: x) if precision is None else precision.up
+    store = L.dtype
     L, V, n = _pad_to_panels(L, V, panel)
     np_ = L.shape[0]
     k = V.shape[1]
@@ -167,8 +188,9 @@ def chol_update_blocked(
         r0 = p * panel
         D = jax.lax.dynamic_slice(L, (r0, r0), (panel, panel))
         vtd = jax.lax.dynamic_slice(vt, (0, r0), (k, panel))
-        D_new, c, s, T = panel_diag(D, vtd, sigma, with_transform=with_T)
-        L = jax.lax.dynamic_update_slice(L, D_new, (r0, r0))
+        D_new, c, s, T = panel_diag(up(D), up(vtd), sigma,
+                                    with_transform=with_T)
+        L = jax.lax.dynamic_update_slice(L, D_new.astype(store), (r0, r0))
         vt = jax.lax.dynamic_update_slice(vt, jnp.zeros_like(vtd), (0, r0))
         w = np_ - r0 - panel
         if w == 0:
@@ -178,10 +200,12 @@ def chol_update_blocked(
         if apply_fn is not None:
             R_new, vtr_new = apply_fn(R, vtr, c, s, T, sigma)
         elif strategy == "gemm":
-            R_new, vtr_new = panel_apply_gemm(R, vtr, T)
+            R_new, vtr_new = panel_apply_gemm(up(R), up(vtr), T)
         else:
-            R_new, vtr_new = panel_apply_paper(R, vtr, c, s, sigma)
-        L = jax.lax.dynamic_update_slice(L, R_new, (r0, r0 + panel))
-        vt = jax.lax.dynamic_update_slice(vt, vtr_new, (0, r0 + panel))
+            R_new, vtr_new = panel_apply_paper(up(R), up(vtr), c, s, sigma)
+        L = jax.lax.dynamic_update_slice(
+            L, R_new.astype(store), (r0, r0 + panel))
+        vt = jax.lax.dynamic_update_slice(
+            vt, vtr_new.astype(store), (0, r0 + panel))
 
     return L[:n, :n]

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import blocked
+from repro.core.precision import Precision
 from repro.runtime.compat import shard_map as _shard_map, shard_map_norep
 
 AxisNames = Union[str, Sequence[str]]
@@ -70,6 +71,7 @@ def chol_update_sharded(
     panel: int = 256,
     strategy: str = "fused",
     interpret: Optional[bool] = None,
+    precision: Optional[Precision] = None,
 ):
     """Rank-k up/down-date of a column-sharded factor.
 
@@ -84,14 +86,24 @@ def chol_update_sharded(
         (per-panel transform GEMM) or 'paper' (element-wise).
       interpret: Pallas interpret mode for the fused strategy (default:
         auto — True off-TPU). Ignored by the jnp strategies.
+      precision: storage/accum policy (DESIGN.md §8). The shard tiles, the
+        running V^T, and the per-panel psum-gathers move in the storage
+        dtype (halving collective + HBM bytes under 'bf16'); the gathered
+        diagonal blocks are cast to the accumulation dtype BEFORE the chain
+        phase, so every replicated recurrence and transform stays fp32.
 
     Returns:
-      The updated factor with the same sharding.
+      The updated factor with the same sharding (storage dtype).
     """
     if sigma not in (1, -1):
         raise ValueError("sigma must be +1 or -1")
     if strategy not in STRATEGIES:
         raise ValueError(f"strategy must be one of {STRATEGIES}, got {strategy!r}")
+    precision = Precision.parse(precision)
+    if precision is not None:
+        L = precision.cast_storage(L)
+        V = precision.cast_storage(V)
+    accum_dtype = None if precision is None else jnp.dtype(precision.accum)
     axes = _axis_tuple(axis)
     n = L.shape[0]
     k = V.shape[1] if V.ndim == 2 else 1
@@ -108,7 +120,11 @@ def chol_update_sharded(
     if n % panel:
         raise ValueError(f"n={n} must be a multiple of panel={panel}")
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        from repro.core.backends import default_interpret
+
+        # The fused strategy's per-shard kernel is Mosaic-only (like the
+        # fused single-device kernel): compile on TPU, interpret elsewhere.
+        interpret = default_interpret(mosaic_only=True)
     vt = jnp.reshape(V, (n, k)).T
 
     col_spec = P(None, axes)
@@ -116,12 +132,14 @@ def chol_update_sharded(
         fn = functools.partial(
             _sharded_update_fused, sigma=sigma, axes=axes, mesh=mesh,
             panel=panel, w_loc=w_loc, interpret=bool(interpret),
+            accum_dtype=accum_dtype,
         )
         wrap = shard_map_norep  # pallas_call has no replication rule
     else:
         fn = functools.partial(
             _sharded_update_perpanel, sigma=sigma, axes=axes, mesh=mesh,
             panel=panel, w_loc=w_loc, strategy=strategy,
+            accum_dtype=accum_dtype,
         )
         wrap = _shard_map
     mapped = wrap(
@@ -155,7 +173,7 @@ def _gather_diag(L_loc, vt, p, *, panel, w_loc, me, axes):
 
 
 def _sharded_update_fused(L_loc, vt_loc, *, sigma, axes, mesh, panel, w_loc,
-                          interpret):
+                          interpret, accum_dtype=None):
     from repro.kernels import sharded as sharded_k
 
     n = L_loc.shape[0]
@@ -163,6 +181,7 @@ def _sharded_update_fused(L_loc, vt_loc, *, sigma, axes, mesh, panel, w_loc,
     dev_off = me * w_loc
     gcol = dev_off + jnp.arange(w_loc)
     n_panels = n // panel
+    acc_t = accum_dtype or jnp.float32
 
     # --- chain phase: every diagonal recurrence + the V^T evolution -------
     # Row-panels of L are never written here, so every slice below reads
@@ -171,14 +190,19 @@ def _sharded_update_fused(L_loc, vt_loc, *, sigma, axes, mesh, panel, w_loc,
         r0 = p * panel
         d_blk, vtd_g = _gather_diag(L_loc, vt, p, panel=panel, w_loc=w_loc,
                                     me=me, axes=axes)
+        if accum_dtype is not None:
+            # The psum gather moved storage-dtype bytes; the replicated
+            # recurrence must NOT run there — upcast before the chain.
+            d_blk = d_blk.astype(accum_dtype)
+            vtd_g = vtd_g.astype(accum_dtype)
         D_new, _, _, T = blocked.panel_diag(d_blk, vtd_g, sigma,
                                             with_transform=True)
         vt_in = vt  # snapshot entering panel p: the kernel's V^T operand
         R = jax.lax.dynamic_slice(L_loc, (r0, 0), (panel, w_loc))
         vt_new = (
-            jnp.dot(T[panel:, :panel], R, preferred_element_type=jnp.float32)
+            jnp.dot(T[panel:, :panel], R, preferred_element_type=acc_t)
             + jnp.dot(T[panel:, panel:], vt,
-                      preferred_element_type=jnp.float32)
+                      preferred_element_type=acc_t)
         ).astype(vt.dtype)
         in_block = (gcol >= r0) & (gcol < r0 + panel)
         vt_new = jnp.where(in_block[None, :], jnp.zeros_like(vt_new), vt_new)
@@ -192,6 +216,7 @@ def _sharded_update_fused(L_loc, vt_loc, *, sigma, axes, mesh, panel, w_loc,
     return sharded_k.panel_apply_sharded(
         L_loc, T_stack, D_stack, vt_stack,
         tile_off=me * (w_loc // panel), panel=panel, interpret=interpret,
+        accum_dtype=accum_dtype,
     )
 
 
@@ -201,12 +226,15 @@ def _sharded_update_fused(L_loc, vt_loc, *, sigma, axes, mesh, panel, w_loc,
 
 
 def _sharded_update_perpanel(L_loc, vt_loc, *, sigma, axes, mesh, panel,
-                             w_loc, strategy):
+                             w_loc, strategy, accum_dtype=None):
     n = L_loc.shape[0]
     me = _combined_axis_index(axes, mesh)
     dev_off = me * w_loc
     gcol = dev_off + jnp.arange(w_loc)
     n_panels = n // panel
+    store = L_loc.dtype
+    up = (lambda x: x) if accum_dtype is None else (
+        lambda x: x.astype(accum_dtype))
 
     def panel_body(carry, p):
         L_loc, vt_loc = carry
@@ -215,23 +243,27 @@ def _sharded_update_perpanel(L_loc, vt_loc, *, sigma, axes, mesh, panel,
         # --- gather the stacked diagonal block to all devices (one psum) ---
         d_blk, vtd_g = _gather_diag(L_loc, vt_loc, p, panel=panel,
                                     w_loc=w_loc, me=me, axes=axes)
-        # --- replicated serial diagonal phase (paper CPU role) ---
+        # --- replicated serial diagonal phase (paper CPU role) — the psum
+        # moved storage bytes; the recurrence itself runs in accum dtype ---
         d_new, c, s, T = blocked.panel_diag(
-            d_blk, vtd_g, sigma, with_transform=(strategy == "gemm")
+            up(d_blk), up(vtd_g), sigma, with_transform=(strategy == "gemm")
         )
         # --- parallel panel phase on local columns (paper GPU role) ---
         R = jax.lax.dynamic_slice(L_loc, (r0, 0), (panel, w_loc))
         if strategy == "gemm":
-            R_new, vt_new = blocked.panel_apply_gemm(R, vt_loc, T)
+            R_new, vt_new = blocked.panel_apply_gemm(up(R), up(vt_loc), T)
         else:
-            R_new, vt_new = blocked.panel_apply_paper(R, vt_loc, c, s, sigma)
+            R_new, vt_new = blocked.panel_apply_paper(up(R), up(vt_loc), c, s,
+                                                      sigma)
         # --- stitch: inside-block columns take the serial result ---
         in_block = (gcol >= r0) & (gcol < r0 + panel)
         d_pad = jax.lax.dynamic_update_slice(
-            jnp.zeros((panel, w_loc), L_loc.dtype), d_new, (0, loc_r0)
+            jnp.zeros((panel, w_loc), d_new.dtype), d_new, (0, loc_r0)
         )
-        R_final = jnp.where(in_block[None, :], d_pad, R_new)
-        vt_final = jnp.where(in_block[None, :], jnp.zeros_like(vt_new), vt_new)
+        R_final = jnp.where(in_block[None, :], d_pad, R_new).astype(store)
+        vt_final = jnp.where(
+            in_block[None, :], jnp.zeros_like(vt_new), vt_new
+        ).astype(store)
         L_loc = jax.lax.dynamic_update_slice(L_loc, R_final, (r0, 0))
         return (L_loc, vt_final), None
 

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import api, backends, solve as _solve
+from repro.core.precision import Precision
 
 Axis = Union[str, tuple]
 
@@ -52,8 +53,11 @@ class CholFactor:
       panel: row-panel size for the blocked/kernel backends.
       backend: registry name or 'auto' (resolved per call by heuristics).
       interpret: force Pallas interpret mode (None = auto-detect).
-      compute_dtype: dtype policy — modifications V are cast to this dtype
-        (None = the factor's own dtype).
+      precision: storage/accum dtype policy (``Precision``, a preset string
+        like 'bf16', or None = compute and store in the factor's own dtype).
+        Replaces the old scalar ``compute_dtype`` hook: 'bf16' stores L-tiles
+        and the running V^T in bfloat16 while the diagonal recurrence,
+        rotation state and GEMM accumulation stay fp32 (DESIGN.md §8).
       mesh, axis: mesh binding for the 'sharded' backend (None otherwise).
     """
 
@@ -61,13 +65,18 @@ class CholFactor:
     panel: int = 256
     backend: str = "auto"
     interpret: Optional[bool] = None
-    compute_dtype: Optional[jnp.dtype] = None
+    precision: Optional[Precision] = None
     mesh: Optional[object] = None
     axis: Axis = "model"
 
+    def __post_init__(self):
+        # Canonicalise string/dtype specs once, so the static aux is a
+        # hashable Precision (or None) and equal policies compare equal.
+        object.__setattr__(self, "precision", Precision.parse(self.precision))
+
     # -- pytree protocol ----------------------------------------------------
     def tree_flatten(self):
-        aux = (self.panel, self.backend, self.interpret, self.compute_dtype,
+        aux = (self.panel, self.backend, self.interpret, self.precision,
                self.mesh, self.axis)
         return (self.data,), aux
 
@@ -119,8 +128,6 @@ class CholFactor:
 
     # -- the paper's operations --------------------------------------------
     def _mutate(self, V, sigma: int) -> "CholFactor":
-        if self.compute_dtype is not None:
-            V = jnp.asarray(V, self.compute_dtype)
         opts = {}
         if self.backend == "sharded":
             if self.batched:
@@ -130,11 +137,13 @@ class CholFactor:
         if self.batched:
             new = api.chol_update_batched(
                 self.data, V, sigma=sigma, method=self.backend,
-                panel=self.panel, interpret=self.interpret, **opts)
+                panel=self.panel, interpret=self.interpret,
+                precision=self.precision, **opts)
         else:
             new = api.chol_update(
                 self.data, V, sigma=sigma, method=self.backend,
-                panel=self.panel, interpret=self.interpret, **opts)
+                panel=self.panel, interpret=self.interpret,
+                precision=self.precision, **opts)
         return dataclasses.replace(self, data=new)
 
     def update(self, V) -> "CholFactor":
@@ -160,8 +169,14 @@ class CholFactor:
         return dataclasses.replace(self, data=new), ok
 
     def scale(self, alpha) -> "CholFactor":
-        """Factor of ``alpha^2 * A``: exact exponential decay of statistics."""
-        return dataclasses.replace(self, data=self.data * alpha)
+        """Factor of ``alpha^2 * A``: exact exponential decay of statistics.
+
+        Only ``|alpha|`` matters (the factor represents ``alpha^2 A``), so
+        the magnitude is used: a raw negative multiplier would flip the
+        diagonal sign and silently break the positive-diagonal invariant
+        that ``is_valid``/``logdet``/``solve`` all rely on.
+        """
+        return dataclasses.replace(self, data=self.data * jnp.abs(alpha))
 
     # -- consumer operations (the reason the factor is maintained) ----------
     def _percore(self, fn, *args):

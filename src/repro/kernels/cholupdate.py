@@ -42,14 +42,24 @@ from jax.experimental import pallas as pl
 # ---------------------------------------------------------------------------
 
 
-def diag_recurrence(D, vtd, *, sigma: int, rows: int, k: int):
+def diag_recurrence(D, vtd, *, sigma: int, rows: int, k: int,
+                    accum_dtype=None):
     """Serial diagonal-block recurrence on values, emitting the transform T.
 
     Same math as ``repro.core.blocked.panel_diag(..., with_transform=True)``:
     the stacked block [D; vtd] is augmented with an identity so the row sweep
     also produces T with ``[R_new; vt_new] = T @ [R; vt]``.
     Returns (D_new, c, s, T).
+
+    ``accum_dtype`` (DESIGN.md §8): the recurrence divides by the running
+    diagonal every row, so under a low-precision storage policy the inputs
+    are upcast here and the outputs — including the rotation state ``(c, s)``
+    and the transform ``T`` — stay in the accumulation dtype; callers
+    downcast only what they store back to HBM.
     """
+    if accum_dtype is not None:
+        D = D.astype(accum_dtype)
+        vtd = vtd.astype(accum_dtype)
     pk = rows + k
     S = jnp.concatenate([D, vtd], axis=0)
     S = jnp.concatenate([S, jnp.eye(pk, dtype=S.dtype)], axis=1)
@@ -80,13 +90,20 @@ def diag_recurrence(D, vtd, *, sigma: int, rows: int, k: int):
     return jnp.triu(S[:rows, :rows]), c_acc, s_acc, S[:, rows:]
 
 
-def apply_rotations(R, vt, c, s, *, sigma: int, rows: int, k: int):
+def apply_rotations(R, vt, c, s, *, sigma: int, rows: int, k: int,
+                    accum_dtype=None):
     """Element-wise rotation-chain panel apply on values (paper ``Apply``).
 
     Streams the rows of R, chaining the k rotations per row; the V tile
     stays live across the whole loop (the paper keeps V in registers).
-    Returns (R_new, vt_new).
+    Returns (R_new, vt_new) — in ``accum_dtype`` when one is given (the
+    rotation chain computes there; callers downcast on store).
     """
+    if accum_dtype is not None:
+        R = R.astype(accum_dtype)
+        vt = vt.astype(accum_dtype)
+        c = c.astype(accum_dtype)
+        s = s.astype(accum_dtype)
 
     def row_body(i, carry):
         R, vt = carry
@@ -114,20 +131,29 @@ def apply_rotations(R, vt, c, s, *, sigma: int, rows: int, k: int):
 # ---------------------------------------------------------------------------
 
 
-def _paper_kernel(c_ref, s_ref, r_ref, vt_ref, r_out, vt_out, *, sigma: int, rows: int, k: int):
+def _paper_kernel(c_ref, s_ref, r_ref, vt_ref, r_out, vt_out, *, sigma: int,
+                  rows: int, k: int, accum_dtype=None):
     R_new, vt_new = apply_rotations(
         r_ref[...], vt_ref[...], c_ref[...], s_ref[...],
-        sigma=sigma, rows=rows, k=k,
+        sigma=sigma, rows=rows, k=k, accum_dtype=accum_dtype,
     )
-    r_out[...] = R_new
-    vt_out[...] = vt_new
+    # Downcast on store: HBM tiles carry the storage dtype, the chain the
+    # accumulation dtype (no-op when the policy is single-dtype).
+    r_out[...] = R_new.astype(r_out.dtype)
+    vt_out[...] = vt_new.astype(vt_out.dtype)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("sigma", "block_w", "interpret")
+    jax.jit, static_argnames=("sigma", "block_w", "interpret", "accum_dtype")
 )
-def panel_apply_paper(R, vt, c, s, *, sigma: int, block_w: int = 512, interpret: bool = False):
-    """Off-diagonal panel apply, paper-style. R: (P, w); vt: (k, w); c,s: (P, k)."""
+def panel_apply_paper(R, vt, c, s, *, sigma: int, block_w: int = 512,
+                      interpret: bool = False, accum_dtype=None):
+    """Off-diagonal panel apply, paper-style. R: (P, w); vt: (k, w); c,s: (P, k).
+
+    ``c``/``s`` may be wider than ``R`` (fp32 rotation state over bf16
+    tiles); the chain then computes in ``accum_dtype`` and the outputs keep
+    ``R``/``vt``'s storage dtype.
+    """
     P, w = R.shape
     k = vt.shape[0]
     pad_w = (-w) % block_w
@@ -137,7 +163,8 @@ def panel_apply_paper(R, vt, c, s, *, sigma: int, block_w: int = 512, interpret:
         vt = jnp.pad(vt, ((0, 0), (0, pad_w)))
     wp = R.shape[1]
     grid = (wp // block_w,)
-    kernel = functools.partial(_paper_kernel, sigma=sigma, rows=P, k=k)
+    kernel = functools.partial(_paper_kernel, sigma=sigma, rows=P, k=k,
+                               accum_dtype=accum_dtype)
     R_new, vt_new = pl.pallas_call(
         kernel,
         grid=grid,
@@ -165,26 +192,42 @@ def panel_apply_paper(R, vt, c, s, *, sigma: int, block_w: int = 512, interpret:
 # ---------------------------------------------------------------------------
 
 
-def _gemm_kernel(t_ref, r_ref, vt_ref, r_out, vt_out, *, rows: int):
+def _gemm_kernel(t_ref, r_ref, vt_ref, r_out, vt_out, *, rows: int,
+                 accum_dtype=None):
+    acc_t = accum_dtype or jnp.float32
     T = t_ref[...]          # (P+k, P+k), fully VMEM-resident
     R = r_ref[...]          # (P, bw)
     vt = vt_ref[...]        # (k, bw)
+    if R.dtype != T.dtype:
+        # Mixed-width operands (fp32 T over bf16 tiles): upcast in VREGs —
+        # the HBM tiles stay narrow, which is where the bandwidth win lives.
+        R = R.astype(T.dtype)
+        vt = vt.astype(T.dtype)
     t_rr = T[:rows, :rows]
     t_rv = T[:rows, rows:]
     t_vr = T[rows:, :rows]
     t_vv = T[rows:, rows:]
-    # Two MXU matmuls per output block; fp32 accumulation.
-    acc = jnp.dot(t_rr, R, preferred_element_type=jnp.float32)
-    acc += jnp.dot(t_rv, vt, preferred_element_type=jnp.float32)
+    # Two MXU matmuls per output block; accumulation in the accum dtype
+    # (fp32 by default — bf16 tiles feed the MXU natively, the products
+    # never round below fp32).
+    acc = jnp.dot(t_rr, R, preferred_element_type=acc_t)
+    acc += jnp.dot(t_rv, vt, preferred_element_type=acc_t)
     r_out[...] = acc.astype(r_out.dtype)
-    accv = jnp.dot(t_vr, R, preferred_element_type=jnp.float32)
-    accv += jnp.dot(t_vv, vt, preferred_element_type=jnp.float32)
+    accv = jnp.dot(t_vr, R, preferred_element_type=acc_t)
+    accv += jnp.dot(t_vv, vt, preferred_element_type=acc_t)
     vt_out[...] = accv.astype(vt_out.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_w", "interpret"))
-def panel_apply_gemm(R, vt, T, *, block_w: int = 512, interpret: bool = False):
-    """Off-diagonal panel apply as one transform GEMM. T: (P+k, P+k)."""
+@functools.partial(
+    jax.jit, static_argnames=("block_w", "interpret", "accum_dtype")
+)
+def panel_apply_gemm(R, vt, T, *, block_w: int = 512, interpret: bool = False,
+                     accum_dtype=None):
+    """Off-diagonal panel apply as one transform GEMM. T: (P+k, P+k).
+
+    ``T`` may be wider than ``R`` (fp32 transform over bf16 tiles); the
+    matmuls accumulate in ``accum_dtype`` (fp32 default) either way.
+    """
     P, w = R.shape
     k = vt.shape[0]
     pad_w = (-w) % block_w
@@ -194,7 +237,7 @@ def panel_apply_gemm(R, vt, T, *, block_w: int = 512, interpret: bool = False):
     wp = R.shape[1]
     grid = (wp // block_w,)
     pk = P + k
-    kernel = functools.partial(_gemm_kernel, rows=P)
+    kernel = functools.partial(_gemm_kernel, rows=P, accum_dtype=accum_dtype)
     R_new, vt_new = pl.pallas_call(
         kernel,
         grid=grid,
@@ -221,27 +264,36 @@ def panel_apply_gemm(R, vt, T, *, block_w: int = 512, interpret: bool = False):
 # ---------------------------------------------------------------------------
 
 
-def _diag_kernel(d_ref, vtd_ref, d_out, c_out, s_out, t_out, *, sigma: int, rows: int, k: int):
+def _diag_kernel(d_ref, vtd_ref, d_out, c_out, s_out, t_out, *, sigma: int,
+                 rows: int, k: int, accum_dtype=None):
     D_new, c, s, T = diag_recurrence(
-        d_ref[...], vtd_ref[...], sigma=sigma, rows=rows, k=k
+        d_ref[...], vtd_ref[...], sigma=sigma, rows=rows, k=k,
+        accum_dtype=accum_dtype,
     )
-    d_out[...] = D_new
-    c_out[...] = c
-    s_out[...] = s
-    t_out[...] = T
+    d_out[...] = D_new.astype(d_out.dtype)
+    c_out[...] = c.astype(c_out.dtype)
+    s_out[...] = s.astype(s_out.dtype)
+    t_out[...] = T.astype(t_out.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("sigma", "interpret"))
-def diag_block(D, vtd, *, sigma: int, interpret: bool = False):
+@functools.partial(
+    jax.jit, static_argnames=("sigma", "interpret", "accum_dtype")
+)
+def diag_block(D, vtd, *, sigma: int, interpret: bool = False,
+               accum_dtype=None):
     """Serial diagonal-block pass on-device. D: (P, P); vtd: (k, P).
 
     Returns (D_new, c, s, T) exactly like ``repro.core.blocked.panel_diag``
-    with ``with_transform=True``.
+    with ``with_transform=True``. When ``accum_dtype`` is given, the
+    recurrence runs there and the rotation state outputs (c, s, T) KEEP the
+    accumulation dtype — only the stored diagonal tile is downcast.
     """
     P = D.shape[0]
     k = vtd.shape[0]
     pk = P + k
-    kernel = functools.partial(_diag_kernel, sigma=sigma, rows=P, k=k)
+    state_dtype = accum_dtype or D.dtype
+    kernel = functools.partial(_diag_kernel, sigma=sigma, rows=P, k=k,
+                               accum_dtype=accum_dtype)
     D_new, c, s, T = pl.pallas_call(
         kernel,
         grid=(1,),
@@ -257,9 +309,9 @@ def diag_block(D, vtd, *, sigma: int, interpret: bool = False):
         ],
         out_shape=[
             jax.ShapeDtypeStruct((P, P), D.dtype),
-            jax.ShapeDtypeStruct((P, k), D.dtype),
-            jax.ShapeDtypeStruct((P, k), D.dtype),
-            jax.ShapeDtypeStruct((pk, pk), D.dtype),
+            jax.ShapeDtypeStruct((P, k), state_dtype),
+            jax.ShapeDtypeStruct((P, k), state_dtype),
+            jax.ShapeDtypeStruct((pk, pk), state_dtype),
         ],
         interpret=interpret,
     )(D, vtd)

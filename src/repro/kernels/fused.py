@@ -58,14 +58,24 @@ from jax.experimental.pallas import tpu as pltpu
 
 # The in-kernel hyperbolic recurrence and rotation-chain apply live in ONE
 # place, shared with the per-panel kernels (see the note in cholupdate.py).
+from repro.core.precision import Precision
 from repro.kernels.cholupdate import apply_rotations, diag_recurrence
 
 GRID_MODES = ("indexed", "rect")
 
 
 def _fused_body(p, t, vt_in, l_ref, l_out, vt_s, t_s, c_s, s_s, *,
-                first, diag_pred, apply_pred, sigma, panel, k, panel_apply):
-    """Shared kernel body: one chain step on tile (p, t), t >= p."""
+                first, diag_pred, apply_pred, sigma, panel, k, panel_apply,
+                accum_dtype):
+    """Shared kernel body: one chain step on tile (p, t), t >= p.
+
+    Precision split (DESIGN.md §8): ``l_ref``/``l_out`` and the running
+    ``V^T`` scratch carry the STORAGE dtype (bf16 under the low-precision
+    policy — these are the HBM-traffic-bound operands); the parked rotation
+    state ``(c, s)``/``T`` scratch and every computation carry the
+    ACCUMULATION dtype (fp32). ``accum_dtype=None`` is the single-dtype
+    legacy path, bit-for-bit.
+    """
 
     @pl.when(first)
     def _load_vt():
@@ -77,12 +87,14 @@ def _fused_body(p, t, vt_in, l_ref, l_out, vt_s, t_s, c_s, s_s, *,
     def _diag():
         D = l_ref[...]
         vtd = vt_s[:, pl.dslice(p * panel, panel)]
-        D_new, c, s, T = diag_recurrence(D, vtd, sigma=sigma, rows=panel, k=k)
-        l_out[...] = D_new
-        # Park the panel transform for the rest of this grid row.
-        c_s[...] = c
-        s_s[...] = s
-        t_s[...] = T
+        D_new, c, s, T = diag_recurrence(D, vtd, sigma=sigma, rows=panel, k=k,
+                                         accum_dtype=accum_dtype)
+        l_out[...] = D_new.astype(l_out.dtype)
+        # Park the panel transform for the rest of this grid row — in the
+        # accumulation dtype (the scratch buffers are allocated fp32).
+        c_s[...] = c.astype(c_s.dtype)
+        s_s[...] = s.astype(s_s.dtype)
+        t_s[...] = T.astype(t_s.dtype)
         # The recurrence annihilates this V^T slab.
         vt_s[:, pl.dslice(p * panel, panel)] = jnp.zeros_like(vtd)
 
@@ -91,36 +103,44 @@ def _fused_body(p, t, vt_in, l_ref, l_out, vt_s, t_s, c_s, s_s, *,
         R = l_ref[...]
         vtt = vt_s[:, pl.dslice(t * panel, panel)]
         if panel_apply == "gemm":
+            acc_t = accum_dtype or jnp.float32
             T = t_s[...]
+            if R.dtype != T.dtype:
+                # bf16 tiles under fp32 transform: upcast in VREGs; the HBM
+                # tile and the V^T scratch slab stay narrow.
+                R = R.astype(T.dtype)
+                vtt = vtt.astype(T.dtype)
             t_rr, t_rv = T[:panel, :panel], T[:panel, panel:]
             t_vr, t_vv = T[panel:, :panel], T[panel:, panel:]
-            acc = jnp.dot(t_rr, R, preferred_element_type=jnp.float32)
-            acc += jnp.dot(t_rv, vtt, preferred_element_type=jnp.float32)
-            accv = jnp.dot(t_vr, R, preferred_element_type=jnp.float32)
-            accv += jnp.dot(t_vv, vtt, preferred_element_type=jnp.float32)
-            R_new = acc.astype(l_out.dtype)
-            vt_new = accv.astype(vtt.dtype)
+            acc = jnp.dot(t_rr, R, preferred_element_type=acc_t)
+            acc += jnp.dot(t_rv, vtt, preferred_element_type=acc_t)
+            accv = jnp.dot(t_vr, R, preferred_element_type=acc_t)
+            accv += jnp.dot(t_vv, vtt, preferred_element_type=acc_t)
+            R_new = acc
+            vt_new = accv
         else:
             R_new, vt_new = apply_rotations(
-                R, vtt, c_s[...], s_s[...], sigma=sigma, rows=panel, k=k
+                R, vtt, c_s[...], s_s[...], sigma=sigma, rows=panel, k=k,
+                accum_dtype=accum_dtype,
             )
-        l_out[...] = R_new
-        vt_s[:, pl.dslice(t * panel, panel)] = vt_new
+        l_out[...] = R_new.astype(l_out.dtype)
+        vt_s[:, pl.dslice(t * panel, panel)] = vt_new.astype(vt_s.dtype)
 
 
 def _indexed_kernel(p_tab, t_tab, vt_in, l_ref, l_out, vt_s, t_s, c_s, s_s,
-                    *, sigma, panel, k, panel_apply):
+                    *, sigma, panel, k, panel_apply, accum_dtype):
     i = pl.program_id(0)
     p, t = p_tab[i], t_tab[i]
     # The table holds only valid chain steps: t == p is a diagonal phase,
     # t > p a panel apply — no clamped no-ops to skip.
     _fused_body(p, t, vt_in, l_ref, l_out, vt_s, t_s, c_s, s_s,
                 first=(i == 0), diag_pred=(t == p), apply_pred=(t > p),
-                sigma=sigma, panel=panel, k=k, panel_apply=panel_apply)
+                sigma=sigma, panel=panel, k=k, panel_apply=panel_apply,
+                accum_dtype=accum_dtype)
 
 
 def _rect_kernel(vt_in, l_ref, l_out, vt_s, t_s, c_s, s_s, *,
-                 sigma, panel, k, n_tiles, panel_apply):
+                 sigma, panel, k, n_tiles, panel_apply, accum_dtype):
     p = pl.program_id(0)
     j = pl.program_id(1)
     t = p + j
@@ -129,7 +149,8 @@ def _rect_kernel(vt_in, l_ref, l_out, vt_s, t_s, c_s, s_s, *,
     _fused_body(p, t, vt_in, l_ref, l_out, vt_s, t_s, c_s, s_s,
                 first=(p == 0) & (j == 0), diag_pred=(j == 0),
                 apply_pred=(j > 0) & (t < n_tiles),
-                sigma=sigma, panel=panel, k=k, panel_apply=panel_apply)
+                sigma=sigma, panel=panel, k=k, panel_apply=panel_apply,
+                accum_dtype=accum_dtype)
 
 
 @functools.lru_cache(maxsize=None)
@@ -145,20 +166,27 @@ def _pair_tables(n_tiles: int):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("sigma", "panel", "panel_apply", "grid_mode", "interpret"),
+    static_argnames=("sigma", "panel", "panel_apply", "grid_mode", "interpret",
+                     "accum_dtype"),
 )
-def _fused_call(L, vt, *, sigma, panel, panel_apply, grid_mode, interpret):
+def _fused_call(L, vt, *, sigma, panel, panel_apply, grid_mode, interpret,
+                accum_dtype=None):
     n_pad = L.shape[0]
     k = vt.shape[0]
     n_tiles = n_pad // panel
     pk = panel + k
+    state_dtype = accum_dtype or L.dtype
     scratch_shapes = [
-        pltpu.VMEM((k, n_pad), L.dtype),   # running V^T (whole launch)
-        pltpu.VMEM((pk, pk), L.dtype),     # transform T   (one grid row)
-        pltpu.VMEM((panel, k), L.dtype),   # rotations c   (one grid row)
-        pltpu.VMEM((panel, k), L.dtype),   # rotations s   (one grid row)
+        # The running V^T carries the STORAGE dtype — it is panel traffic,
+        # the bandwidth-bound quantity; the parked rotation state carries
+        # the ACCUMULATION dtype (fp32 under the low-precision policy).
+        pltpu.VMEM((k, n_pad), L.dtype),      # running V^T (whole launch)
+        pltpu.VMEM((pk, pk), state_dtype),    # transform T   (one grid row)
+        pltpu.VMEM((panel, k), state_dtype),  # rotations c   (one grid row)
+        pltpu.VMEM((panel, k), state_dtype),  # rotations s   (one grid row)
     ]
-    kw = dict(sigma=sigma, panel=panel, k=k, panel_apply=panel_apply)
+    kw = dict(sigma=sigma, panel=panel, k=k, panel_apply=panel_apply,
+              accum_dtype=accum_dtype)
     if grid_mode == "indexed":
         # 1-D grid over exactly the nP(nP+1)/2 chain steps; the scalar-
         # prefetched tables drive both the body and the BlockSpec index maps.
@@ -216,6 +244,7 @@ def chol_update_fused(
     panel_apply: str = "gemm",
     grid_mode: str = "indexed",
     interpret=None,
+    precision=None,
 ):
     """Rank-k up/down-date in a single fused ``pallas_call``.
 
@@ -229,10 +258,18 @@ def chol_update_fused(
       grid_mode: 'indexed' (1-D grid over a scalar-prefetch index table of
         the nP(nP+1)/2 chain steps, default) or 'rect' (the clamped
         rectangular (nP, nP) grid, kept for comparison).
-      interpret: force Pallas interpret mode (default: auto — True off-TPU).
+      interpret: force Pallas interpret mode (default: auto — True anywhere
+        but TPU: this kernel's PrefetchScalarGridSpec + pltpu.VMEM scratch
+        are Mosaic-only, so on GPU prefer the per-panel kernels, which
+        Triton can compile — ``backends.resolve('auto')`` does exactly that).
+      precision: storage/accum policy (``Precision``, 'bf16', or None).
+        Under 'bf16' the L-tiles and the running V^T scratch are bfloat16
+        (halving the per-tile HBM bytes of this bandwidth-bound kernel)
+        while the diagonal recurrence, (c, s), and T stay fp32.
 
     Returns:
-      The updated upper-triangular factor, same shape/dtype as ``L``.
+      The updated upper-triangular factor, same shape as ``L``, in the
+      policy's storage dtype (``L.dtype`` when no policy is given).
     """
     if sigma not in (1, -1):
         raise ValueError(f"sigma must be +1 or -1, got {sigma}")
@@ -241,7 +278,15 @@ def chol_update_fused(
     if grid_mode not in GRID_MODES:
         raise ValueError(f"grid_mode must be one of {GRID_MODES}, got {grid_mode!r}")
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        from repro.core.backends import default_interpret
+
+        interpret = default_interpret(mosaic_only=True)
+    precision = Precision.parse(precision)
+    accum_dtype = None
+    if precision is not None:
+        L = precision.cast_storage(L)
+        V = precision.cast_storage(V)
+        accum_dtype = jnp.dtype(precision.accum)
     squeeze = V.ndim == 1
     if squeeze:
         V = V[:, None]
@@ -256,6 +301,7 @@ def chol_update_fused(
         panel_apply=panel_apply,
         grid_mode=grid_mode,
         interpret=bool(interpret),
+        accum_dtype=accum_dtype,
     )
     return out[:n, :n]
 
@@ -282,6 +328,28 @@ def launch_count(n: int, panel: int, *, method: str) -> int:
     if method == "pallas_2phase":
         return n_panels + (n_panels - 1)
     raise ValueError(f"unknown method {method!r}")
+
+
+def bytes_per_update(n: int, panel: int, k: int, *, storage_dtype,
+                     grid_mode: str = "indexed") -> int:
+    """HBM bytes one fused rank-k update moves, by storage dtype.
+
+    The paper's bandwidth-bound accounting: every chain step reads one
+    ``panel x panel`` L-tile and writes it back (the indexed grid visits
+    exactly the ``nP(nP+1)/2`` upper-triangular tiles; the rect grid's
+    clamped steps move no extra bytes), plus the one-time ``(k, n)`` V^T
+    load at step 0. The rotation state never touches HBM (VMEM scratch), so
+    it does not appear here — which is exactly why bf16 tiles halve this
+    number while fp32 state costs nothing in traffic.
+    """
+    isize = int(np.dtype(jnp.dtype(storage_dtype)).itemsize)
+    n_tiles = -(-n // panel)
+    tiles = n_tiles * (n_tiles + 1) // 2
+    if grid_mode not in GRID_MODES:
+        raise ValueError(f"grid_mode must be one of {GRID_MODES}, got {grid_mode!r}")
+    l_traffic = 2 * tiles * panel * panel * isize  # read + write per tile
+    vt_traffic = k * (n_tiles * panel) * isize     # V^T: loaded once
+    return l_traffic + vt_traffic
 
 
 def grid_steps(n: int, panel: int, *, grid_mode: str = "indexed") -> int:

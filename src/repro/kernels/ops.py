@@ -3,16 +3,16 @@ from __future__ import annotations
 
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
-
 from repro.core import blocked
+from repro.core.backends import default_interpret
+from repro.core.precision import Precision
 from repro.kernels import cholupdate as _k
 
 
 def _default_interpret() -> bool:
-    # Interpret mode everywhere except a real TPU backend.
-    return jax.default_backend() != "tpu"
+    # One shared policy (repro.core.backends): the per-panel kernels lower
+    # on both TPU (Mosaic) and GPU (Triton), so compile on either.
+    return default_interpret()
 
 
 def chol_update_pallas(
@@ -24,40 +24,53 @@ def chol_update_pallas(
     strategy: str = "paper",
     block_w: int = 512,
     interpret: Optional[bool] = None,
+    precision: Optional[Precision] = None,
 ):
     """Panelled rank-k up/down-date with Pallas panel kernels.
 
     ``strategy='paper'`` uses the faithful element-wise kernel,
     ``strategy='gemm'`` the transform-GEMM kernel. The panel orchestration
     (diagonal pass -> panel kernel -> next panel) reuses the blocked driver.
+
+    ``precision`` (DESIGN.md §8): the blocked driver stores L/V^T in the
+    storage dtype between panels while ``panel_diag`` and the rotation
+    state run in the accumulation dtype; the kernels here receive bf16
+    tiles with fp32 ``(c, s)``/``T`` and accumulate in fp32.
     """
     if interpret is None:
         interpret = _default_interpret()
+    precision = Precision.parse(precision)
+    accum_dtype = None if precision is None else precision.accum
 
     if strategy == "paper":
 
         def apply_fn(R, vt, c, s, T, sig):
             return _k.panel_apply_paper(
-                R, vt, c, s, sigma=sig, block_w=block_w, interpret=interpret
+                R, vt, c, s, sigma=sig, block_w=block_w, interpret=interpret,
+                accum_dtype=accum_dtype,
             )
 
     elif strategy == "gemm":
 
         def apply_fn(R, vt, c, s, T, sig):
             return _k.panel_apply_gemm(
-                R, vt, T, block_w=block_w, interpret=interpret
+                R, vt, T, block_w=block_w, interpret=interpret,
+                accum_dtype=accum_dtype,
             )
 
     else:
         raise ValueError(f"unknown strategy {strategy!r}")
 
     return blocked.chol_update_blocked(
-        L, V, sigma=sigma, panel=panel, strategy="gemm", apply_fn=apply_fn
+        L, V, sigma=sigma, panel=panel, strategy="gemm", apply_fn=apply_fn,
+        precision=precision,
     )
 
 
-def diag_block_pallas(D, vtd, *, sigma: int = 1, interpret: Optional[bool] = None):
+def diag_block_pallas(D, vtd, *, sigma: int = 1,
+                      interpret: Optional[bool] = None, accum_dtype=None):
     """On-device serial diagonal-block pass (paper CPU phase)."""
     if interpret is None:
         interpret = _default_interpret()
-    return _k.diag_block(D, vtd, sigma=sigma, interpret=interpret)
+    return _k.diag_block(D, vtd, sigma=sigma, interpret=interpret,
+                         accum_dtype=accum_dtype)

@@ -48,26 +48,33 @@ def launches_traced() -> int:
     return _LAUNCHES_TRACED
 
 
-def _panel_kernel(off_ref, t_ref, d_ref, vt_ref, l_ref, l_out, *, panel):
+def _panel_kernel(off_ref, t_ref, d_ref, vt_ref, l_ref, l_out, *, panel,
+                  accum_dtype=None):
     p = pl.program_id(0)
     t = pl.program_id(1)
     g = off_ref[0] + t  # global tile index of local tile t
 
     @pl.when(p < g)
     def _apply():
+        acc_t = accum_dtype or jnp.float32
         T = t_ref[0]
         R = l_ref[...]
         vtt = vt_ref[0]
-        acc = jnp.dot(T[:panel, :panel], R,
-                      preferred_element_type=jnp.float32)
-        acc += jnp.dot(T[:panel, panel:], vtt,
-                       preferred_element_type=jnp.float32)
+        if R.dtype != T.dtype:
+            # Low-precision storage policy: bf16 shard tiles / V^T snapshots
+            # under fp32 chain-phase transforms — upcast in VREGs, accumulate
+            # in the policy's accum dtype, store back narrow (DESIGN.md §8).
+            R = R.astype(T.dtype)
+            vtt = vtt.astype(T.dtype)
+        acc = jnp.dot(T[:panel, :panel], R, preferred_element_type=acc_t)
+        acc += jnp.dot(T[:panel, panel:], vtt, preferred_element_type=acc_t)
         l_out[...] = acc.astype(l_out.dtype)
 
     @pl.when(p == g)
     def _diag():
-        # The chain phase already ran the recurrence; write its result back.
-        l_out[...] = d_ref[0]
+        # The chain phase already ran the recurrence (in the accumulation
+        # dtype); write its result back in the shard's storage dtype.
+        l_out[...] = d_ref[0].astype(l_out.dtype)
 
     @pl.when(p > g)
     def _zero():
@@ -76,7 +83,7 @@ def _panel_kernel(off_ref, t_ref, d_ref, vt_ref, l_ref, l_out, *, panel):
 
 
 def panel_apply_sharded(L_loc, T_stack, D_stack, vt_stack, *, tile_off,
-                        panel: int, interpret: bool):
+                        panel: int, interpret: bool, accum_dtype=None):
     """Apply a whole update's panel phase to one column shard, one launch.
 
     Args:
@@ -88,6 +95,8 @@ def panel_apply_sharded(L_loc, T_stack, D_stack, vt_stack, *, tile_off,
         per-device under shard_map).
       panel: tile size P.
       interpret: Pallas interpret mode.
+      accum_dtype: GEMM accumulation dtype (None = fp32) — the precision
+        policy's accum, honored here exactly as in the chain phase.
 
     Returns:
       (n, w_loc) the fully updated column shard.
@@ -110,7 +119,8 @@ def panel_apply_sharded(L_loc, T_stack, D_stack, vt_stack, *, tile_off,
     )
     _LAUNCHES_TRACED += 1
     return pl.pallas_call(
-        functools.partial(_panel_kernel, panel=panel),
+        functools.partial(_panel_kernel, panel=panel,
+                          accum_dtype=accum_dtype),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n, w_loc), L_loc.dtype),
         interpret=interpret,

@@ -65,6 +65,20 @@ def test_factor_identity_and_scale():
     np.testing.assert_allclose(g.matrix(), jnp.eye(8), atol=1e-6)
 
 
+def test_factor_scale_uses_magnitude():
+    # Regression: scale(alpha) represents alpha^2 * A, so only |alpha|
+    # matters — a raw negative multiplier used to flip the diagonal sign and
+    # produce a factor is_valid() then flags downstream.
+    f = CholFactor.identity(8, scale=4.0)
+    neg = f.scale(-0.5)
+    np.testing.assert_allclose(neg.data, f.scale(0.5).data, atol=0)
+    assert bool(neg.is_valid())
+    assert float(neg.data[0, 0]) > 0
+    # jit/traced alpha too (the optimizer's decay path).
+    traced = jax.jit(lambda fac, a: fac.scale(a))(f, jnp.float32(-0.5))
+    np.testing.assert_allclose(traced.data, neg.data, atol=0)
+
+
 def test_factor_downdate_guarded():
     n, k = 48, 2
     L, V = make_problem(n, k, seed=9)
@@ -170,6 +184,88 @@ def test_auto_heuristic_prefers_fused_on_pallas_capable_targets():
     assert backends.resolve("paper", n=8) == "paper"
 
 
+def test_auto_heuristic_recognizes_gpu():
+    # Regression: 'auto' treated TPU as the only Pallas-capable device, so
+    # on GPU — the paper's actual target hardware — it silently fell back
+    # to the jnp gemm path and never launched a kernel. GPU routes to the
+    # per-panel GEMM kernel (plain pallas_call, Triton-lowerable); the
+    # fused kernel's PrefetchScalarGridSpec/pltpu scratch are Mosaic-only.
+    for kind in ("gpu", "cuda", "rocm", "GPU"):
+        name = backends.resolve("auto", n=4096, device_kind=kind)
+        assert backends.get(name).kind == "pallas", (kind, name)
+        assert name == "pallas_gemm"
+    assert backends.resolve("auto", n=64, device_kind="gpu") == "pallas_gemm"
+    # The interpret auto-detect agrees: per-panel kernels compile on GPU,
+    # the fused kernel only on TPU (one shared policy, not three copies).
+    assert backends.default_interpret() == (
+        jax.default_backend().lower() not in backends.PALLAS_DEVICE_KINDS)
+    assert backends.default_interpret(mosaic_only=True) == (
+        jax.default_backend() != "tpu")
+
+
+def test_batched_path_resolves_through_the_same_heuristic(monkeypatch):
+    # Regression: chol_update_batched hard-defaulted to method='fused',
+    # bypassing the device-kind heuristic the single-factor path uses. Both
+    # must funnel through backends.resolve — and the batched path resolves
+    # once per batch, not once per vmapped element.
+    from repro.core import api
+
+    calls = []
+    real_resolve = backends.resolve
+
+    def spy(method, **kw):
+        calls.append(method)
+        return real_resolve(method, **kw)
+
+    monkeypatch.setattr(backends, "resolve", spy)
+    api._impl_cache.clear()
+    n, k, B = 64, 2, 3
+    Ls, Vs = zip(*[make_problem(n, k, seed=600 + b) for b in range(B)])
+    out = api.chol_update_batched(jnp.stack(Ls), jnp.stack(Vs), panel=16)
+    assert out.shape == (B, n, n)
+    # First call is the per-batch 'auto' resolution; inside the vmap the
+    # method is already concrete (never 'auto' again).
+    assert calls[0] == "auto"
+    assert all(m != "auto" for m in calls[1:])
+    # And the resolved name matches what the single-factor path picks.
+    expected = real_resolve("auto", n=n, panel=16, interpret=None)
+    np.testing.assert_allclose(
+        out[0], chol_update(Ls[0], Vs[0], method=expected, panel=16),
+        atol=tol_for(jnp.float32, n),
+    )
+
+
+def test_impl_cache_is_bounded_and_keys_meshes_by_metadata():
+    from repro.core import api
+
+    api._impl_cache.clear()
+    # Bounded: cycling through many configurations must not grow without
+    # limit (the old unbounded lru_cache leaked every distinct opts tuple).
+    for i in range(api._IMPL_CACHE_MAX + 40):
+        api._cached_impl("gemm", 16 + i, None, None, {})
+    assert api.impl_cache_len() <= api._IMPL_CACHE_MAX
+
+    # Mesh-valued opts key by identity-safe metadata: two equal meshes built
+    # at different times share ONE entry (no per-object retention). Real
+    # jax Meshes are interned, so fake the duck type to force distinct
+    # objects with equal metadata — the serving-process leak scenario.
+    class FakeMesh:
+        axis_names = ("model",)
+        shape = {"model": 1}
+        devices = np.array(jax.devices()[:1])
+
+        __hash__ = None  # would crash an object-keyed cache
+
+    api._impl_cache.clear()
+    mesh_a, mesh_b = FakeMesh(), FakeMesh()
+    assert mesh_a is not mesh_b
+    impl_a = api._cached_impl("sharded", 16, None, None, {"mesh": mesh_a})
+    impl_b = api._cached_impl("sharded", 16, None, None, {"mesh": mesh_b})
+    assert impl_a is impl_b
+    assert api.impl_cache_len() == 1
+    api._impl_cache.clear()
+
+
 def test_registry_dispatch_agrees_across_backends():
     n, k = 80, 4
     L, V = make_problem(n, k, seed=77)
@@ -188,6 +284,48 @@ def test_resolve_backend_for_factor():
     assert resolve_backend_for(f) == backends.resolve("auto", n=32, panel=256)
     g = f.with_backend("fused")
     assert resolve_backend_for(g) == "fused"
+
+
+# ---------------------------------------------------------------------------
+# Mixed-dtype inputs: pinned behaviour, per backend
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["reference", "paper", "gemm", "pallas",
+                                     "pallas_gemm", "fused"])
+def test_mixed_dtype_V_is_cast_to_factor_dtype(backend):
+    # Pinned: update(V) with V.dtype != L.dtype casts V to the FACTOR's
+    # dtype before dispatch, on every backend — the maintained factor is
+    # never silently promoted (and never silently demoted) by a caller
+    # handing in a differently-typed modification.
+    n, k = 64, 2
+    L, V = make_problem(n, k, seed=88)
+    ref = chol_update_ref(L, V, sigma=1)
+    for vdtype in (jnp.bfloat16, jnp.float16):
+        Vm = V.astype(vdtype)
+        out = chol_update(L, Vm, method=backend, panel=16, interpret=True)
+        assert out.dtype == L.dtype, (backend, vdtype)
+        # Accuracy: only V's quantization separates it from the oracle.
+        np.testing.assert_allclose(
+            out, chol_update_ref(L, Vm.astype(L.dtype), sigma=1),
+            atol=tol_for(jnp.float32, n),
+        )
+        assert float(jnp.max(jnp.abs(out - ref))) < 0.1  # V rounding only
+    # The object API pins the same contract.
+    f = CholFactor.from_factor(L, panel=16, backend=backend, interpret=True)
+    out_f = f.update(V.astype(jnp.bfloat16))
+    assert out_f.dtype == L.dtype
+
+
+def test_mixed_dtype_bf16_factor_fp32_V():
+    # The other direction: a bf16-stored factor receiving an fp32 V keeps
+    # its own (narrow) dtype.
+    n, k = 48, 2
+    L, V = make_problem(n, k, seed=13)
+    f = CholFactor.from_factor(L.astype(jnp.bfloat16), panel=16,
+                               backend="gemm", precision="bf16")
+    out = f.update(V)  # V is fp32
+    assert out.dtype == jnp.bfloat16
 
 
 # ---------------------------------------------------------------------------
