@@ -1,5 +1,8 @@
-"""Render the EXPERIMENTS.md §Dry-run and §Roofline tables from the
-dryrun JSONL records.
+"""Render the EXPERIMENTS.md tables: §Dry-run and §Roofline from the
+dryrun JSONL records, plus the perf-trajectory snapshots — the
+``--dtype`` precision axis of ``BENCH_cholupdate.json`` (bytes-per-update
+vs storage dtype, DESIGN.md §8) and the streaming-service coalesce-width
+sweep of ``BENCH_stream.json`` (updates/sec and bytes/row, DESIGN.md §9).
 
   PYTHONPATH=src python -m benchmarks.report
 """
@@ -63,6 +66,82 @@ def dryrun_summary(recs, tag):
     return "\n".join(lines)
 
 
+def load_snapshot(filename):
+    """Line-delimited snapshot records (newest last); [] when absent."""
+    path = RESULTS / filename
+    if not path.exists():
+        return []
+    return [json.loads(l) for l in path.open() if l.strip()]
+
+
+def parse_derived(derived):
+    """'err=1e-3 bytes_per_update=42 speedup=2x' -> dict of the pairs."""
+    out = {}
+    for tok in derived.split():
+        if "=" in tok:
+            k, v = tok.split("=", 1)
+            out[k] = v
+    return out
+
+
+def precision_table(rec):
+    """The --dtype axis PR 3 added: per-storage-dtype rows of the
+    cholupdate suite (previously ignored by this report)."""
+    lines = [
+        "| backend | dtype | us/update | err | bytes/update |",
+        "|---|---|---|---|---|",
+    ]
+    found = False
+    for row in rec.get("rows", []):
+        parts = row["name"].split("/")
+        if len(parts) < 4 or parts[1] != "precision":
+            continue
+        found = True
+        d = parse_derived(row["derived"])
+        lines.append(
+            f"| {parts[2]} | {parts[3]} | {row['us']:.1f} "
+            f"| {d.get('err', '—')} | {d.get('bytes_per_update', '—')} |"
+        )
+    return "\n".join(lines) if found else None
+
+
+def stream_table(rec):
+    """BENCH_stream.json rows: the coalesce-width sweep + derived gains."""
+    lines = [
+        "| row | us/row | updates/s | bytes/row | mutations |",
+        "|---|---|---|---|---|",
+    ]
+    extras = []
+    for row in rec.get("rows", []):
+        d = parse_derived(row["derived"])
+        if "speedup" in d:
+            extras.append(f"**{row['name']}**: {row['derived']}")
+            continue
+        lines.append(
+            f"| {row['name']} | {row['us']:.1f} "
+            f"| {d.get('updates_per_s', '—')} | {d.get('bytes_per_row', '—')} "
+            f"| {d.get('mutations', '—')} |"
+        )
+    return "\n".join(lines + [""] + extras)
+
+
+def snapshot_sections():
+    chol = load_snapshot("BENCH_cholupdate.json")
+    for rec in reversed(chol):  # newest record that carries the dtype axis
+        table = precision_table(rec)
+        if table:
+            print(f"\n### Precision axis ({rec['commit']}, "
+                  f"backend={rec['backend']}, dtypes={rec.get('dtypes')})\n")
+            print(table)
+            break
+    stream = load_snapshot("BENCH_stream.json")
+    if stream:
+        rec = stream[-1]
+        print(f"\n### Streaming service ({rec['commit']}, "
+              f"backend={rec['backend']})\n")
+        print(stream_table(rec))
+
+
 def main():
     for tag in ("singlepod", "multipod", "technique"):
         recs = load(tag)
@@ -72,6 +151,7 @@ def main():
         print(dryrun_summary(recs, tag))
         print()
         print(roofline_table(recs))
+    snapshot_sections()
 
 
 if __name__ == "__main__":

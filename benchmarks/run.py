@@ -13,7 +13,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", type=str, default=None,
-                    help="comma-separated subset: cholupdate,kernels,distributed,optimizer")
+                    help="comma-separated subset: cholupdate,kernels,"
+                         "distributed,optimizer,stream")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -21,6 +22,7 @@ def main() -> None:
         distributed_bench,
         kernel_bench,
         optimizer_bench,
+        stream_bench,
     )
 
     suites = {
@@ -28,6 +30,7 @@ def main() -> None:
         "kernels": kernel_bench.run,            # Pallas tiles / VMEM / AI
         "distributed": distributed_bench.run,   # multi-device scaling
         "optimizer": optimizer_bench.run,       # O(kd^2) vs O(d^3) in situ
+        "stream": stream_bench.run,             # coalesce-width sweep (§9)
     }
     chosen = args.only.split(",") if args.only else list(suites)
     rows = []

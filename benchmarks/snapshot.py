@@ -1,16 +1,21 @@
 """Append-only benchmark snapshots: the repo's perf trajectory.
 
 ``scripts/bench.sh`` runs the benchmark suites and appends ONE json record
-(line-delimited) to ``benchmarks/results/BENCH_cholupdate.json``:
+(line-delimited) per snapshot file:
 
     {"ts": ..., "commit": ..., "backend": ..., "quick": ...,
      "rows": [{"name": ..., "us": ..., "derived": ...}, ...]}
 
-Every future PR that touches a hot path runs the same script; the file then
-holds the before/after pair (and the whole history), so regressions are a
-``jq`` query instead of archaeology. Interpret-mode wall-clock off-TPU is
-dispatch-bound, not kernel performance — compare like against like via the
-recorded ``backend`` field.
+Suites map to snapshot files: the kernel/cholupdate/distributed/optimizer
+suites share ``benchmarks/results/BENCH_cholupdate.json``; the streaming-
+service suite lands in ``BENCH_stream.json`` (its axis is coalesce width,
+not problem size — mixing the two would make both trajectories unqueryable).
+
+Every future PR that touches a hot path runs the same script; each file
+then holds the before/after pair (and the whole history), so regressions
+are a ``jq`` query instead of archaeology. Interpret-mode wall-clock
+off-TPU is dispatch-bound, not kernel performance — compare like against
+like via the recorded ``backend`` field.
 """
 from __future__ import annotations
 
@@ -23,6 +28,7 @@ from pathlib import Path
 
 RESULTS = Path(__file__).resolve().parent / "results"
 SNAPSHOT = RESULTS / "BENCH_cholupdate.json"
+SNAPSHOT_STREAM = RESULTS / "BENCH_stream.json"
 
 
 def _git_commit() -> str:
@@ -47,7 +53,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sizes (default: quick)")
-    ap.add_argument("--only", type=str, default="cholupdate,kernels",
+    ap.add_argument("--only", type=str, default="cholupdate,kernels,stream",
                     help="comma-separated suite subset (see benchmarks.run)")
     ap.add_argument("--dtype", type=str, default="float32,bfloat16",
                     help="comma-separated storage-dtype axis for suites that "
@@ -62,41 +68,51 @@ def main() -> None:
         distributed_bench,
         kernel_bench,
         optimizer_bench,
+        stream_bench,
     )
 
+    # suite -> (runner, snapshot file): the stream suite's axis (coalesce
+    # width) gets its own trajectory file.
     suites = {
-        "cholupdate": cholupdate_bench.run,
-        "kernels": kernel_bench.run,
-        "distributed": distributed_bench.run,
-        "optimizer": optimizer_bench.run,
+        "cholupdate": (cholupdate_bench.run, SNAPSHOT),
+        "kernels": (kernel_bench.run, SNAPSHOT),
+        "distributed": (distributed_bench.run, SNAPSHOT),
+        "optimizer": (optimizer_bench.run, SNAPSHOT),
+        "stream": (stream_bench.run, SNAPSHOT_STREAM),
     }
     dtypes = tuple(d for d in args.dtype.split(",") if d)
-    rows = []
+    by_file = {}
+    suites_by_file = {}
     for name in args.only.split(","):
-        fn = suites[name]
+        fn, outfile = suites[name]
+        rows = by_file.setdefault(outfile, [])
+        suites_by_file.setdefault(outfile, []).append(name)
         if "dtypes" in inspect.signature(fn).parameters:
             fn(rows, quick=not args.full, dtypes=dtypes)
         else:
             fn(rows, quick=not args.full)
 
-    record = {
-        "ts": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
-        "commit": _git_commit(),
-        "backend": jax.default_backend(),
-        "quick": not args.full,
-        "suites": args.only,
-        "dtypes": list(dtypes),
-        "rows": [
-            {"name": n, "us": round(us, 1), "derived": derived}
-            for n, us, derived in rows
-        ],
-    }
     RESULTS.mkdir(parents=True, exist_ok=True)
-    with SNAPSHOT.open("a") as fh:
-        fh.write(json.dumps(record) + "\n")
-    print(f"appended {len(rows)} rows to {SNAPSHOT}")
-    for n, us, derived in rows:
-        print(f"{n},{us:.1f},{derived}")
+    commit = _git_commit()
+    ts = time.strftime("%Y-%m-%dT%H:%M:%S%z")
+    for outfile, rows in by_file.items():
+        record = {
+            "ts": ts,
+            "commit": commit,
+            "backend": jax.default_backend(),
+            "quick": not args.full,
+            "suites": ",".join(suites_by_file[outfile]),
+            "dtypes": list(dtypes),
+            "rows": [
+                {"name": n, "us": round(us, 1), "derived": derived}
+                for n, us, derived in rows
+            ],
+        }
+        with outfile.open("a") as fh:
+            fh.write(json.dumps(record) + "\n")
+        print(f"appended {len(rows)} rows to {outfile}")
+        for n, us, derived in rows:
+            print(f"{n},{us:.1f},{derived}")
 
 
 if __name__ == "__main__":

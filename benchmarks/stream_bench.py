@@ -1,0 +1,111 @@
+"""Streaming-service benchmark: updates/sec and bytes/row vs coalesce width.
+
+The paper's rank-k amortization claim (~7x at k=16) restated as a serving
+metric: a fleet of B users each produces R rank-1 observations; the
+``StreamService`` coalesces them in per-user ring buffers and flushes as
+fused batched rank-k mutations. Sweeping the coalesce width 1 -> 32 shows
+
+* **updates/sec** — absorbed rank-1 rows per wall-clock second through the
+  full production path (ring push, zero-padded block build, donated jitted
+  step, registry dispatch). Off-TPU interpret mode is dispatch-bound, so
+  the sweep measures exactly what coalescing removes: per-mutation launch
+  overhead. width=1 pays one batched mutation per row; width=16 amortizes
+  it 16x.
+* **bytes/row** — the hardware-independent bandwidth accounting from the
+  fused kernel's tile arithmetic (``fused.bytes_per_update(n, panel, k) /
+  k``): the whole factor is read+written once per *mutation* regardless of
+  k, so bytes per absorbed row falls ~k-fold — the paper's economics.
+* **mutations** — the instrumented batched-mutation count
+  (``repro.stream.store.mutations_issued``), asserting the coalescing
+  ratio rather than inferring it.
+
+The ``dtypes`` axis records the bf16-storage bytes/row halving at the
+paper's k=16 sweet spot (DESIGN.md §8). Rows land in
+``benchmarks/results/BENCH_stream.json`` via ``scripts/bench.sh``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.precision import Precision
+from repro.kernels import fused as fused_k
+from repro.stream import FactorStore, StreamService
+from repro.stream import store as store_mod
+
+
+def _drive(*, B, n, R, width, panel, interpret, precision=None, seed=0):
+    """Push B*R rank-1 rows through a fresh service, flushing every
+    ``width`` rows per user; returns (seconds, mutations)."""
+    rng = np.random.default_rng(seed)
+    rows = (0.1 * rng.normal(size=(R, B, n))).astype(np.float32)
+    store = FactorStore(n, capacity=B, width=width, panel=panel,
+                        backend="fused", interpret=interpret,
+                        precision=precision)
+    svc = StreamService(store, auto_flush=False)
+    for u in range(B):
+        svc.admit(u)
+    m0 = store_mod.mutations_issued()
+    t0 = time.perf_counter()
+    for t in range(R):
+        for u in range(B):
+            svc.push(u, rows[t, u])
+        if (t + 1) % width == 0:
+            svc.flush()
+    jax.block_until_ready(store.factor.data)
+    return time.perf_counter() - t0, store_mod.mutations_issued() - m0
+
+
+def run(csv_rows, *, quick=False, dtypes=("float32",)):
+    interpret = jax.default_backend() != "tpu"
+    B, n, R, panel = (4, 64, 32, 32) if quick else (8, 128, 64, 32)
+    widths = (1, 2, 4, 8, 16, 32)
+
+    ups = {}
+    for width in widths:
+        # Warmup drive compiles the jitted steps for this width's shapes
+        # (the step cache is shared across stores with equal metadata), so
+        # the timed drive measures the serving loop, not tracing.
+        _drive(B=B, n=n, R=max(width, 8), width=width, panel=panel,
+               interpret=interpret, seed=1)
+        dt, muts = _drive(B=B, n=n, R=R, width=width, panel=panel,
+                          interpret=interpret, seed=2)
+        rows_total = B * R
+        ups[width] = rows_total / dt
+        bytes_row = fused_k.bytes_per_update(
+            n, panel, width, storage_dtype=jnp.float32) // width
+        csv_rows.append(
+            (f"stream/width{width}/B{B}n{n}", dt / rows_total * 1e6,
+             f"updates_per_s={ups[width]:.0f} bytes_per_row={bytes_row} "
+             f"mutations={muts}")
+        )
+
+    # The acceptance headline: coalesced k=16 vs k=1 sequential absorption.
+    csv_rows.append(
+        (f"stream/coalesce_gain_k16_vs_k1/B{B}n{n}", 0.0,
+         f"speedup={ups[16] / ups[1]:.2f}x "
+         f"updates_per_s_k16={ups[16]:.0f} updates_per_s_k1={ups[1]:.0f}")
+    )
+
+    # Storage-dtype axis at the paper's sweet spot: bytes/row is the
+    # bandwidth-bound quantity; bf16 halves it (DESIGN.md §8).
+    for dtype in dtypes:
+        precision = None if dtype in ("float32", "f32") else dtype
+        policy = Precision.parse(precision)
+        storage = jnp.float32 if policy is None else policy.storage
+        # Per-precision warmup: each policy is a distinct step-cache entry
+        # (and fleet dtype), so the first drive traces — keep it untimed.
+        _drive(B=B, n=n, R=16, width=16, panel=panel,
+               interpret=interpret, precision=precision, seed=1)
+        dt, muts = _drive(B=B, n=n, R=16, width=16, panel=panel,
+                          interpret=interpret, precision=precision, seed=3)
+        bytes_row = fused_k.bytes_per_update(
+            n, panel, 16, storage_dtype=storage) // 16
+        csv_rows.append(
+            (f"stream/precision/{dtype}/B{B}n{n}k16", dt / (B * 16) * 1e6,
+             f"bytes_per_row={bytes_row} mutations={muts}")
+        )
+    return csv_rows

@@ -12,10 +12,12 @@ Two modes:
 
 * single  — one stream, the paper's original workload (serial reference
   backend picked by the registry heuristic).
-* batched — a fleet of independent per-user streams advanced in lockstep:
-  one batched ``CholFactor`` on the fused single-launch kernel (DESIGN.md
-  §5) absorbs every user's modification in one device dispatch, the
-  serving-shaped workload the batched factor exists for.
+* batched — a fleet of independent per-user streams served through the
+  ``repro.stream`` subsystem (DESIGN.md §9): per-user rank-1 observations
+  are pushed into a ``StreamService``, coalesced in ring buffers to the
+  paper's k=16 sweet spot, and absorbed as fused batched rank-k flushes
+  over one ``CholFactor`` fleet — with the sliding window handled as
+  deferred, coalesced downdates scheduled by the service.
 
 Run:  PYTHONPATH=src python examples/online_ridge.py [--batched] [--users B]
 """
@@ -26,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import CholFactor
+from repro.stream import FactorStore, StreamService, mutations_issued
 
 
 def run_single(*, d=64, batch=8, window_batches=4, steps=12, lam=1e-1, seed=0):
@@ -68,55 +71,80 @@ def run_single(*, d=64, batch=8, window_batches=4, steps=12, lam=1e-1, seed=0):
 
 
 def run_batched(*, users=4, d=64, batch=8, window_batches=4, steps=8,
-                lam=1e-1, panel=32, seed=0):
-    """A fleet of independent sliding-window ridge streams, one per user.
+                lam=1e-1, panel=32, width=16, seed=0):
+    """A fleet of independent sliding-window ridge streams, one per user,
+    served through ``repro.stream``.
 
-    ONE batched CholFactor holds every user's statistics; every step issues
-    exactly TWO batched device calls for the whole fleet (one update, one
-    downdate) instead of 2*users — the launch economics the fused kernel
-    brings to serving.
+    Each step produces ``batch`` rank-1 rows per user; the service buffers
+    them and flushes every ``width // batch`` steps as ONE fused batched
+    rank-k update for the whole fleet (plus, when the window slides, one
+    guarded batched downdate) — the coalescing economics the subsystem
+    exists for: rows/mutation approaches the paper's k=16 sweet spot
+    instead of 2*users*steps separate device calls.
     """
     rng = np.random.default_rng(seed)
     true_w = rng.normal(size=(users, d)).astype(np.float32)
-    f = CholFactor.identity(d, scale=lam, batch=users, backend="fused",
-                            panel=panel)
-    xty = jnp.zeros((users, d))
-    window = collections.deque()
+    store = FactorStore(d, capacity=users, width=width, panel=panel,
+                        backend="fused", init_scale=lam)
+    svc = StreamService(store, window=window_batches, auto_flush=False)
+    for u in range(users):
+        svc.admit(u)
 
-    print(f"fleet of {users} users, d={d}, rank-{batch} window slides "
-          f"({f!r})")
+    # Host bookkeeping mirroring the flush reports: rows not yet absorbed,
+    # and rows currently inside each user's factor.
+    pending = [collections.deque() for _ in range(users)]
+    active = [collections.deque() for _ in range(users)]
+    xty = np.zeros((users, d), np.float32)
+
+    def absorb(report):
+        if report is None or report.empty:
+            return
+        assert all(report.downdate_ok.values())
+        for u, k in report.absorbed.items():
+            for _ in range(k):
+                x, yv = pending[u].popleft()
+                active[u].append((x, yv))
+                xty[u] += x * yv
+        for u, k in report.downdated.items():
+            for _ in range(k):
+                x, yv = active[u].popleft()
+                xty[u] -= x * yv
+
+    cadence = max(width // batch, 1)
+    muts0 = mutations_issued()
+    print(f"fleet of {users} users, d={d}, {batch} rank-1 rows/user/step, "
+          f"coalesce width {width} ({store.factor!r})")
     print(f"{'step':>4} {'max_err_vs_exact':>18} {'mean_w_err':>12}")
     for t in range(steps):
+        absorb(svc.tick())                      # window expiry downdates
         X = rng.normal(size=(users, batch, d)).astype(np.float32)
         y = np.einsum("ubd,ud->ub", X, true_w) + 0.1 * rng.normal(
             size=(users, batch)).astype(np.float32)
-        Xj, yj = jnp.asarray(X), jnp.asarray(y)
-
-        # One launch updates every user's factor (V is (B, d, batch)).
-        f = f.update(jnp.swapaxes(Xj, 1, 2))
-        xty = xty + jnp.einsum("ubd,ub->ud", Xj, yj)
-        window.append((Xj, yj))
-
-        if len(window) > window_batches:
-            Xold, yold = window.popleft()
-            f = f.downdate(jnp.swapaxes(Xold, 1, 2))
-            xty = xty - jnp.einsum("ubd,ub->ud", Xold, yold)
-
-        w = f.solve(xty)
-
-        # Exact per-user windowed solutions.
-        errs, werrs = [], []
         for u in range(users):
-            Xw = np.concatenate([np.asarray(x[u]) for x, _ in window])
-            yw = np.concatenate([np.asarray(yb[u]) for _, yb in window])
-            A_exact = lam * np.eye(d) + Xw.T @ Xw
-            w_exact = np.linalg.solve(A_exact, Xw.T @ yw)
-            errs.append(float(np.max(np.abs(np.asarray(w[u]) - w_exact))))
-            werrs.append(float(np.linalg.norm(np.asarray(w[u]) - true_w[u])
-                               / np.linalg.norm(true_w[u])))
-        print(f"{t:4d} {max(errs):18.3e} {np.mean(werrs):12.4f}")
+            for j in range(batch):
+                svc.push(u, X[u, j])
+                pending[u].append((X[u, j].copy(), float(y[u, j])))
+        if (t + 1) % cadence == 0:
+            absorb(svc.flush())
 
-    print("every user's maintained factor tracks its exact windowed solution.")
+            w = store.factor.solve(jnp.asarray(xty))
+            errs, werrs = [], []
+            for u in range(users):
+                Xw = np.stack([x for x, _ in active[u]])
+                yw = np.asarray([yv for _, yv in active[u]])
+                A_exact = lam * np.eye(d) + Xw.T @ Xw
+                w_exact = np.linalg.solve(A_exact, Xw.T @ yw)
+                errs.append(float(np.max(np.abs(np.asarray(w[u]) - w_exact))))
+                werrs.append(float(
+                    np.linalg.norm(np.asarray(w[u]) - true_w[u])
+                    / np.linalg.norm(true_w[u])))
+            print(f"{t:4d} {max(errs):18.3e} {np.mean(werrs):12.4f}")
+
+    muts = mutations_issued() - muts0
+    rows = users * batch * steps
+    print(f"{rows} rank-1 rows absorbed in {muts} batched mutations "
+          f"({rows / max(muts, 1):.1f} rows/mutation); every user's "
+          f"maintained factor tracks its exact windowed solution.")
 
 
 if __name__ == "__main__":

@@ -5,14 +5,17 @@ Two stages, both fleet-shaped:
 1. the LM serving path (reduced h2o-danube config) batch-decodes a prompt
    continuation for every user (``repro.launch.serve.generate``);
 
-2. a **personalization sidecar** maintains one batched ``CholFactor`` of
-   per-user preference statistics over the generated stream: every decode
-   step contributes each user's token embedding as a rank-1 row, absorbed
-   for the WHOLE fleet in one batched update on the fused kernel, and a
-   sliding window downdates the expiring step — the paper's up/down-dating
-   as the online-learning layer of a serving stack. The per-user preference
-   weights are read back with ``.solve`` and checked against the exact
-   windowed regression.
+2. a **personalization sidecar** maintains per-user preference statistics
+   over the generated stream through ``repro.stream``: every decode step
+   contributes each user's token embedding as a rank-1 ``push`` into the
+   ``StreamService``, which coalesces the traffic in per-user ring buffers
+   and absorbs it in fused rank-k flushes over one batched ``CholFactor``
+   fleet — the paper's bandwidth-bound economics (rank-k amortization, ~7x
+   at k=16) applied as the online-learning layer of a serving stack. A
+   sliding window forgets old steps as *deferred, coalesced downdates*
+   scheduled by the service (window expiry), not per-step device calls.
+   At every flush boundary the per-user preference weights are read back
+   with ``.solve`` and checked against the exact windowed regression.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
@@ -23,57 +26,79 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import CholFactor
 from repro.data import DataConfig, SyntheticTokens
 from repro.launch.serve import generate
 from repro.models import init_model, split_params
+from repro.stream import FactorStore, StreamService, mutations_issued
 
 
-def personalize(token_stream, *, d_feat=32, window=8, lam=1e-1, panel=16,
-                seed=0):
-    """Per-user online ridge over the generated tokens, one batched factor.
+def personalize(token_stream, *, d_feat=32, width=8, window=16, lam=1e-1,
+                panel=16, seed=0):
+    """Per-user online ridge over the generated tokens, one streamed fleet.
 
-    token_stream: (B, T) generated token ids. Returns max tracking error of
-    the maintained solution vs the exact windowed solve.
+    token_stream: (B, T) generated token ids. Returns (max tracking error
+    of the maintained solution vs the exact windowed solve at every flush
+    boundary, batched mutations issued, rank-1 rows absorbed).
     """
     B, T = token_stream.shape
     rng = np.random.default_rng(seed)
     vocab_hash = 4096
-    emb = jnp.asarray(
+    emb = np.asarray(
         rng.normal(size=(vocab_hash, d_feat)).astype(np.float32)
         / np.sqrt(d_feat)
     )
-    true_pref = jnp.asarray(rng.normal(size=(B, d_feat)).astype(np.float32))
+    true_pref = np.asarray(rng.normal(size=(B, d_feat)).astype(np.float32))
 
-    f = CholFactor.identity(d_feat, scale=lam, batch=B, backend="fused",
-                            panel=panel)
-    xty = jnp.zeros((B, d_feat))
-    ring = collections.deque()
+    # The streaming subsystem: one fused-backend fleet, rank-1 pushes
+    # coalesced to width-k flushes, sliding window via scheduled downdates.
+    store = FactorStore(d_feat, capacity=B, width=width, panel=panel,
+                        backend="fused", init_scale=lam)
+    svc = StreamService(store, window=window, auto_flush=False)
+    for u in range(B):
+        svc.admit(u)
 
+    # Host-side bookkeeping mirroring the service's reports: rows pushed
+    # but unflushed, and rows currently inside each user's factor.
+    pending = [collections.deque() for _ in range(B)]
+    active = [collections.deque() for _ in range(B)]
+    xty = np.zeros((B, d_feat), np.float32)
+
+    def absorb(report):
+        if report is None or report.empty:
+            return
+        assert all(report.downdate_ok.values()), "windowed downdate refused"
+        for u, k in report.absorbed.items():
+            for _ in range(k):
+                phi, r = pending[u].popleft()
+                active[u].append((phi, r))
+                xty[u] += phi * r
+        for u, k in report.downdated.items():
+            for _ in range(k):
+                phi, r = active[u].popleft()
+                xty[u] -= phi * r
+
+    muts0, rows_pushed = mutations_issued(), 0
     max_err = 0.0
     for t in range(T):
-        phi = emb[token_stream[:, t] % vocab_hash]          # (B, d) features
-        reward = jnp.einsum("bd,bd->b", phi, true_pref)     # per-user signal
-        # One batched rank-1 update for the whole fleet (single launch on
-        # the fused backend), one batched downdate when the window slides.
-        f = f.update(phi[:, :, None])
-        xty = xty + phi * reward[:, None]
-        ring.append((phi, reward))
-        if len(ring) > window:
-            phi_old, r_old = ring.popleft()
-            f = f.downdate(phi_old[:, :, None])
-            xty = xty - phi_old * r_old[:, None]
-        w = f.solve(xty)                                    # (B, d) prefs
-
-        # exact windowed solve, per user
-        Phi = jnp.stack([p for p, _ in ring], axis=1)       # (B, W, d)
-        R = jnp.stack([r for _, r in ring], axis=1)         # (B, W)
-        A = lam * jnp.eye(d_feat)[None] + jnp.einsum(
-            "bwd,bwe->bde", Phi, Phi)
-        rhs = jnp.einsum("bwd,bw->bd", Phi, R)
-        w_exact = jnp.linalg.solve(A, rhs[..., None])[..., 0]
-        max_err = max(max_err, float(jnp.max(jnp.abs(w - w_exact))))
-    return max_err
+        absorb(svc.tick())                      # window expiry fires here
+        phi = emb[token_stream[:, t] % vocab_hash]          # (B, d)
+        reward = np.einsum("bd,bd->b", phi, true_pref)      # per-user signal
+        for u in range(B):
+            svc.push(u, phi[u])
+            pending[u].append((phi[u].copy(), float(reward[u])))
+            rows_pushed += 1
+        if (t + 1) % width == 0:
+            absorb(svc.flush())
+            # Maintained vs exact windowed solve over the absorbed rows.
+            w = store.factor.solve(jnp.asarray(xty))        # (B, d) prefs
+            for u in range(B):
+                Phi = np.stack([p for p, _ in active[u]])
+                R = np.asarray([r for _, r in active[u]])
+                A = lam * np.eye(d_feat) + Phi.T @ Phi
+                w_exact = np.linalg.solve(A, Phi.T @ R)
+                max_err = max(max_err, float(
+                    np.max(np.abs(np.asarray(w[u]) - w_exact))))
+    return max_err, mutations_issued() - muts0, rows_pushed
 
 
 def main():
@@ -87,11 +112,14 @@ def main():
                          cache_len=prompt_len + gen, temperature=0.8)
     print(f"generated {toks.shape} tokens at {tps:.1f} tok/s (batch {batch})")
 
-    err = personalize(np.asarray(toks[:, prompt_len:]))
+    err, muts, rows = personalize(np.asarray(toks[:, prompt_len:]))
     print(f"personalization sidecar: fleet of {batch} per-user factors, "
+          f"{rows} rank-1 rows coalesced into {muts} batched rank-k "
+          f"mutations ({rows / max(muts, 1):.1f} rows/mutation), "
           f"max err vs exact windowed solve = {err:.3e}")
     assert tps > 0
     assert err < 1e-2
+    assert muts < rows, "coalescing must batch rank-1 rows into rank-k"
     return tps
 
 

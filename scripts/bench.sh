@@ -5,10 +5,14 @@
 #
 #   scripts/bench.sh              # quick sizes (CI-friendly)
 #   scripts/bench.sh --full       # paper-scale sizes
-#   scripts/bench.sh --only cholupdate,kernels
+#   scripts/bench.sh --only cholupdate,kernels,stream
 #   scripts/bench.sh --dtype float32,bfloat16   # storage-dtype axis
 #                                 # (the default: per-dtype rows with
 #                                 # bytes-per-update land in the snapshot)
+#
+# The stream suite (coalesce-width sweep, DESIGN.md §9) appends to its own
+# trajectory file benchmarks/results/BENCH_stream.json; everything else
+# shares BENCH_cholupdate.json. Render both with `python -m benchmarks.report`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

@@ -1,3 +1,11 @@
-from repro.checkpoint.checkpoint import all_steps, latest_step, restore, save
+from repro.checkpoint.checkpoint import (
+    all_steps,
+    latest_step,
+    np_dtype_for,
+    read_meta,
+    restore,
+    save,
+)
 
-__all__ = ["save", "restore", "latest_step", "all_steps"]
+__all__ = ["save", "restore", "latest_step", "all_steps", "read_meta",
+           "np_dtype_for"]

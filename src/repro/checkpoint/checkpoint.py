@@ -25,6 +25,18 @@ import numpy as np
 _STEP_RE = re.compile(r"^step_(\d+)$")
 
 
+def np_dtype_for(name: str) -> np.dtype:
+    """Resolve a stored dtype string, including ml_dtypes names (bfloat16,
+    fp8 variants) that numpy alone cannot parse. Shared by ``restore`` and
+    the stream WAL codec (``repro.stream.durability``)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
 def _flatten_with_names(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     names = ["/".join(str(getattr(k, "key", k)) for k in path) for path, _ in flat]
@@ -32,8 +44,16 @@ def _flatten_with_names(tree):
     return names, leaves, treedef
 
 
-def save(ckpt_dir, step: int, tree: Any, *, keep: int = 3) -> Path:
-    """Atomic save of a pytree at ``step``; prunes to the newest ``keep``."""
+def save(ckpt_dir, step: int, tree: Any, *, keep: int = 3,
+         extra: Optional[dict] = None) -> Path:
+    """Atomic save of a pytree at ``step``; prunes to the newest ``keep``.
+
+    ``extra`` is an arbitrary JSON-able dict persisted alongside the leaf
+    metadata and returned by ``read_meta`` — the home for non-array aux a
+    pytree's treedef carries but raw leaves lose (e.g. a ``CholFactor``
+    fleet's backend/panel/precision, which ``repro.stream.durability``
+    round-trips through here).
+    """
     ckpt_dir = Path(ckpt_dir)
     final = ckpt_dir / f"step_{step:08d}"
     tmp = ckpt_dir / f".tmp_step_{step:08d}"
@@ -42,7 +62,7 @@ def save(ckpt_dir, step: int, tree: Any, *, keep: int = 3) -> Path:
     tmp.mkdir(parents=True)
     names, leaves, _ = _flatten_with_names(tree)
     arrays = {}
-    meta = {"step": step, "leaves": []}
+    meta = {"step": step, "leaves": [], "extra": extra or {}}
     for i, (name, leaf) in enumerate(zip(names, leaves)):
         arr = np.asarray(jax.device_get(leaf))
         key = f"a{i}"
@@ -86,6 +106,19 @@ def latest_step(ckpt_dir) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def read_meta(ckpt_dir, step: int) -> dict:
+    """The committed checkpoint's metadata dict (leaf specs + ``extra``).
+
+    Lets callers recover what ``restore(like=...)`` cannot: the non-array
+    aux recorded at save time (see ``save``'s ``extra``). Raises like
+    ``restore`` on an uncommitted/missing step.
+    """
+    path = Path(ckpt_dir) / f"step_{step:08d}"
+    if not (path / "DONE").exists():
+        raise FileNotFoundError(f"no committed checkpoint at {path}")
+    return json.loads((path / "tree.json").read_text())
+
+
 def restore(ckpt_dir, step: int, like: Any, *, shardings: Any = None) -> Any:
     """Restore into the structure of ``like`` (values ignored). With
     ``shardings`` (same treedef), leaves are device_put with the new mesh's
@@ -95,18 +128,10 @@ def restore(ckpt_dir, step: int, like: Any, *, shardings: Any = None) -> Any:
         raise FileNotFoundError(f"no committed checkpoint at {path}")
     meta = json.loads((path / "tree.json").read_text())
 
-    def _np_dtype(name: str):
-        try:
-            return np.dtype(name)
-        except TypeError:
-            import ml_dtypes
-
-            return np.dtype(getattr(ml_dtypes, name))
-
     with np.load(path / "arrays.npz") as npz:
         by_name = {
             leaf["name"]: npz[leaf["key"]]
-            .view(_np_dtype(leaf["dtype"]))
+            .view(np_dtype_for(leaf["dtype"]))
             .reshape(leaf["shape"])
             for leaf in meta["leaves"]
         }

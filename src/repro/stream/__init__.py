@@ -1,0 +1,36 @@
+"""``repro.stream``: streaming update service over a managed factor fleet.
+
+The layer between the ``CholFactor`` engine and a serving system
+(DESIGN.md §9): ``Coalescer`` buffers per-user rank-1 traffic in ring
+buffers and drains it as sign-scheduled rank-k blocks (paper sweet spot
+k=16); ``FactorStore`` manages the batched fleet those blocks mutate
+through one donated-buffer jitted step; ``StreamService`` ties them
+together with window forgetting, deadline flushes and decay;
+``durability`` makes the whole thing survive a kill via checkpoint +
+replay-log restore.
+"""
+from repro.stream.coalescer import Coalescer, DrainResult, RingBuffer
+from repro.stream.durability import (
+    ReplayLog,
+    checkpoint_service,
+    decode_row,
+    encode_row,
+    restore_service,
+)
+from repro.stream.service import FlushReport, StreamService
+from repro.stream.store import FactorStore, mutations_issued
+
+__all__ = [
+    "Coalescer",
+    "DrainResult",
+    "RingBuffer",
+    "FactorStore",
+    "FlushReport",
+    "StreamService",
+    "ReplayLog",
+    "checkpoint_service",
+    "restore_service",
+    "encode_row",
+    "decode_row",
+    "mutations_issued",
+]

@@ -1,0 +1,311 @@
+"""``StreamService``: the streaming update service over a factor fleet.
+
+This is the layer between "a factor object" (``repro.core.CholFactor``)
+and "a serving system": it owns one ``FactorStore`` fleet plus one
+``Coalescer`` per admitted user, and turns per-user rank-1 traffic into
+fused rank-k flushes:
+
+* ``push(user, v, sign=+1)`` buffers a rank-1 observation (auto-admitting
+  unknown users); with ``auto_flush`` a push that fills a user's ring
+  triggers a fleet flush of every ready user.
+* ``tick()`` advances the service's logical clock — the serving loop's
+  heartbeat. It fires deadline flushes (stale buffers) and window expiry:
+  a row absorbed with ``window=W`` is scheduled as a *future downdate* due
+  ``W`` ticks later, the sliding-window forgetting of the online-ridge
+  consumers, deferred and coalesced like everything else.
+* ``flush(force=...)`` drains every selected user and issues at most ONE
+  batched rank-k mutation per sign block per round (updates first, then
+  guarded downdates — the coalescer's sign schedule), zero-padding
+  non-flushing slots so the jitted donated step never re-traces.
+* ``decay(alpha)`` is exact exponential forgetting for the whole fleet.
+
+Every state-changing call appends one record to the attached write-ahead
+``ReplayLog`` (``repro.stream.durability``); checkpoint + log replay
+reproduce the exact post-flush state after a crash, because flush events
+are logged and replay re-issues the identical mutation sequence.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.stream.coalescer import Coalescer
+from repro.stream.store import FactorStore
+
+_MAX_FLUSH_ROUNDS = 64  # backstop: bounded work per flush call
+
+
+@dataclasses.dataclass
+class FlushReport:
+    """What one ``flush`` call did (host-side bookkeeping for consumers).
+
+    Attributes:
+      absorbed: user -> number of update rows absorbed (FIFO order).
+      downdated: user -> number of downdate rows applied (FIFO order);
+        counted even when the guard refused (see ``downdate_ok``).
+      downdate_ok: user -> feasibility verdict of that user's downdate
+        block (absent when the user had no downdates this flush). A False
+        verdict means the block was REFUSED — the slot is unchanged.
+      mutations: batched rank-k mutations dispatched (one per sign block
+        per round; 1–2 in the steady state).
+      rounds: drain/apply rounds (1 unless a ring held > width rows).
+      reason: 'width' | 'deadline' | 'manual' | 'force'.
+    """
+
+    absorbed: Dict[object, int] = dataclasses.field(default_factory=dict)
+    downdated: Dict[object, int] = dataclasses.field(default_factory=dict)
+    downdate_ok: Dict[object, bool] = dataclasses.field(default_factory=dict)
+    mutations: int = 0
+    rounds: int = 0
+    reason: str = "manual"
+
+    @property
+    def empty(self) -> bool:
+        return not self.absorbed and not self.downdated
+
+
+class StreamService:
+    """Coalescing streaming-update service over a ``FactorStore`` fleet.
+
+    Args:
+      store: the fleet (its ``width`` is the coalesce width).
+      window: sliding-window length in ticks — every absorbed update row is
+        scheduled as a downdate due ``window`` ticks after its flush (None:
+        no forgetting).
+      deadline: staleness bound in ticks — pending rows older than this
+        force a flush at the next ``tick()`` (None: width/manual only).
+      auto_flush: flush automatically when a push fills a user's ring.
+      capacity: per-sign ring capacity per user (default ``2 * width``).
+    """
+
+    def __init__(self, store: FactorStore, *, window: Optional[int] = None,
+                 deadline: Optional[int] = None, auto_flush: bool = True,
+                 capacity: Optional[int] = None):
+        self.store = store
+        self.window = window
+        self.deadline = deadline
+        self.auto_flush = auto_flush
+        self._ring_capacity = capacity
+        self.tick_count = 0
+        self._coalescers: Dict[object, Coalescer] = {}
+        # (due_tick, insertion_order, user, row) — heap by due tick.
+        self._schedule: List[Tuple[int, int, object, np.ndarray]] = []
+        self._sched_seq = 0
+        self._wal = None          # durability.ReplayLog or None
+        self._replaying = False   # replay applies logged flushes verbatim
+
+    # -- durability plumbing ------------------------------------------------
+    def attach_wal(self, wal) -> None:
+        """Attach the write-ahead log new events are appended to."""
+        self._wal = wal
+
+    def _log(self, record: dict) -> None:
+        if self._wal is not None and not self._replaying:
+            self._wal.append(record)
+
+    # -- membership ---------------------------------------------------------
+    def users(self):
+        return self.store.users()
+
+    def _coalescer(self, user) -> Coalescer:
+        return self._coalescers[user]
+
+    def admit(self, user, *, scale: Optional[float] = None) -> int:
+        """Admit ``user`` into the fleet (idempotent)."""
+        # Key on SERVICE membership, not store membership: a user admitted
+        # directly on the FactorStore still needs its coalescer here.
+        known = user in self._coalescers
+        slot = self.store.admit(user, scale=scale, tick=self.tick_count)
+        if not known:
+            self._coalescers[user] = Coalescer(
+                self.store.n, width=self.store.width,
+                capacity=self._ring_capacity, deadline=self.deadline,
+                dtype=self.store.row_dtype)
+            self._log({"op": "admit", "user": user, "scale": scale})
+        return slot
+
+    def evict(self, user) -> None:
+        """Remove a user: pending buffer rows and scheduled downdates are
+        DROPPED (the slot's statistics go with it — there is nothing left
+        to keep consistent)."""
+        self.store.evict(user)
+        del self._coalescers[user]
+        self._schedule = [e for e in self._schedule if e[2] != user]
+        heapq.heapify(self._schedule)
+        self._log({"op": "evict", "user": user})
+
+    def evict_idle(self, *, max_idle: int) -> tuple:
+        stale = tuple(u for u in self.store.users()
+                      if self.tick_count - self.store.last_used(u) > max_idle)
+        for u in stale:
+            self.evict(u)
+        return stale
+
+    # -- traffic ------------------------------------------------------------
+    def push(self, user, v, *, sign: int = 1) -> Optional[FlushReport]:
+        """Buffer one rank-1 observation; may auto-flush (report returned).
+
+        ``sign=+1`` is ``push_update``, ``-1`` ``push_downdate`` — the
+        deferred mutation lands at the next flush, coalesced into that
+        sign's rank-k block.
+        """
+        self.admit(user)
+        v = np.asarray(v, self.store.row_dtype).reshape(-1)
+        # Buffer BEFORE logging: a push that raises (full ring, wrong dim)
+        # is survivable live, so it must not leave a poison record that
+        # would re-raise inside every future replay.
+        self._coalescers[user].push(v, sign=sign, tick=self.tick_count)
+        self._log({"op": "push", "user": user, "sign": sign,
+                   **_encode_row(v)})
+        if (self.auto_flush and not self._replaying
+                and self._coalescers[user].ready()):
+            return self.flush(reason="width")
+        return None
+
+    def push_update(self, user, v) -> Optional[FlushReport]:
+        return self.push(user, v, sign=1)
+
+    def push_downdate(self, user, v) -> Optional[FlushReport]:
+        return self.push(user, v, sign=-1)
+
+    def tick(self) -> Optional[FlushReport]:
+        """Advance the logical clock; fire deadline/window flushes."""
+        self.tick_count += 1
+        self._log({"op": "tick"})
+        if self._replaying:
+            return None
+        due = self._schedule and self._schedule[0][0] <= self.tick_count
+        expired = any(c.expired(self.tick_count)
+                      for c in self._coalescers.values())
+        if due or expired:
+            return self.flush(reason="deadline")
+        return None
+
+    def decay(self, alpha) -> None:
+        """Exact exponential forgetting across the fleet (``scale``)."""
+        self._log({"op": "decay", "alpha": float(alpha)})
+        self.store.decay(alpha)
+
+    # -- window forgetting ---------------------------------------------------
+    def _schedule_row(self, user, v, *, due: int) -> None:
+        heapq.heappush(
+            self._schedule,
+            (due, self._sched_seq, user,
+             np.asarray(v, self.store.row_dtype)))
+        self._sched_seq += 1
+
+    def scheduled(self) -> int:
+        """Rows awaiting their window-expiry downdate."""
+        return len(self._schedule)
+
+    # -- the flush -----------------------------------------------------------
+    def flush(self, *, force: bool = False, reason: str = "manual"
+              ) -> FlushReport:
+        """Drain + absorb: the coalescer's sign schedule over the fleet.
+
+        Selection: users whose rings hit the width trigger, whose buffers
+        passed the deadline, or who received due window-downdates; with
+        ``force`` every user with any pending row. Each round builds one
+        zero-padded block per sign and dispatches at most one batched
+        mutation per block (updates first, then guarded downdates).
+        """
+        due_ready = bool(self._schedule
+                         and self._schedule[0][0] <= self.tick_count)
+        trigger = {u for u, c in self._coalescers.items()
+                   if (force and c.pending) or c.ready()
+                   or c.expired(self.tick_count)}
+        report = FlushReport(reason="force" if force else reason)
+        if not due_ready and not trigger:
+            return report
+        # Log BEFORE mutating: a crash mid-flush replays the whole flush
+        # (selection recomputes identically from the replayed state).
+        self._log({"op": "flush", "force": force, "reason": report.reason})
+
+        # Due window rows become ordinary buffered downdates first, so ONE
+        # code path (the ring drain) feeds the mutation — and the WAL
+        # replay, which re-runs this method, reproduces it exactly. A
+        # backlog of due groups (missed heartbeats) drains rounds early to
+        # make ring room rather than overflowing.
+        must: set = set()
+        while self._schedule and self._schedule[0][0] <= self.tick_count:
+            _, _, user, row = heapq.heappop(self._schedule)
+            if user not in self._coalescers:
+                continue  # evicted after scheduling: nothing left to forget
+            c = self._coalescers[user]
+            if c.down_free == 0:
+                self._run_flush({user}, report)
+            c.push_downdate(row, tick=self.tick_count)
+            must.add(user)
+
+        return self._run_flush(trigger | must, report)
+
+    def _run_flush(self, selected: set, report: FlushReport) -> FlushReport:
+        from repro.stream import store as store_mod
+
+        store = self.store
+        pending = set(selected)
+        while pending and report.rounds < _MAX_FLUSH_ROUNDS:
+            up_rows: Dict[int, np.ndarray] = {}
+            dn_rows: Dict[int, np.ndarray] = {}
+            dn_users: Dict[object, int] = {}
+            for u in sorted(pending, key=store.slot):
+                blocks = self._coalescers[u].drain(tick=self.tick_count)
+                s = store.slot(u)
+                if blocks.up.shape[0]:
+                    up_rows[s] = blocks.up
+                    report.absorbed[u] = (report.absorbed.get(u, 0)
+                                          + blocks.up.shape[0])
+                    if self.window is not None:
+                        for row in blocks.up:
+                            self._schedule_row(
+                                u, row, due=self.tick_count + self.window)
+                if blocks.down.shape[0]:
+                    dn_rows[s] = blocks.down
+                    dn_users[u] = s
+                    report.downdated[u] = (report.downdated.get(u, 0)
+                                           + blocks.down.shape[0])
+            pending = {u for u in pending if self._coalescers[u].pending}
+
+            Vup = store.pad_block(up_rows) if up_rows else None
+            Vdn = store.pad_block(dn_rows) if dn_rows else None
+            if Vup is None and Vdn is None:
+                break
+            before = store_mod.mutations_issued()
+            ok = store.apply(Vup, Vdn)
+            report.mutations += store_mod.mutations_issued() - before
+            report.rounds += 1
+            if ok is not None:
+                ok_host = np.asarray(ok)
+                for u, s in dn_users.items():
+                    report.downdate_ok[u] = bool(
+                        report.downdate_ok.get(u, True) and ok_host[s])
+        return report
+
+    # -- reads ---------------------------------------------------------------
+    def solve(self, user, b):
+        """Solve against one user's maintained factor (reflects flushed
+        state only — pending buffer rows are not yet absorbed)."""
+        return self.store.factor_for(user).solve(b)
+
+    def pending(self, user) -> int:
+        return self._coalescers[user].pending if user in self._coalescers \
+            else 0
+
+    def __repr__(self):
+        buffered = sum(c.pending for c in self._coalescers.values())
+        return (f"StreamService(users={self.store.active}, "
+                f"tick={self.tick_count}, buffered={buffered}, "
+                f"scheduled={len(self._schedule)}, window={self.window}, "
+                f"store={self.store!r})")
+
+
+def _encode_row(v: np.ndarray) -> dict:
+    """WAL row encoding — the codec lives in ``repro.stream.durability``;
+    the call-time import avoids the module cycle (durability imports the
+    service type for restore)."""
+    from repro.stream.durability import encode_row
+
+    return encode_row(v)

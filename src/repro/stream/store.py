@@ -1,0 +1,339 @@
+"""``FactorStore``: a managed fleet of per-user Cholesky factors.
+
+One batched ``CholFactor`` of shape ``(capacity, n, n)`` holds every
+admitted user's statistics; slots are assigned on ``admit`` (growing the
+batch axis by doubling when full), returned on ``evict``, reclaimed by
+``evict_idle``, and the live set can be ``compact``ed back down. Every
+mutation of the fleet runs through ONE donated-buffer jitted step, so the
+serving loop never copies the O(B·n^2) fleet: the update block is absorbed
+first as a single fused batched rank-k update, then the downdate block via
+the feasibility guard (``downdate_guarded``) — the sign schedule the
+coalescer's equivalence proof covers. Exponential forgetting is
+``decay(alpha)`` (the engine's exact ``scale``), also donated.
+
+Instrumentation: ``mutations_issued()`` counts batched rank-k mutations
+dispatched to the engine — ONE per sign block per ``apply`` call,
+regardless of fleet size, the streaming analogue of
+``repro.kernels.sharded.launches_traced`` (there: pallas_call
+constructions per shard; here: batched engine mutations per flush — on the
+fused backend each one is a single device launch for the whole fleet,
+because vmap folds the batch into the kernel grid). Tests assert the
+launch-count story against this counter.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import warnings
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CholFactor
+from repro.core.precision import Precision
+
+
+@contextlib.contextmanager
+def _quiet_donation():
+    """Suppress the unusable-donation warning around OUR jitted steps only.
+
+    Donation is best-effort: XLA:CPU cannot donate and warns per compile.
+    It is still correct (and load-bearing) on TPU/GPU, where the fleet
+    would otherwise be copied once per flush. Scoped here so user code
+    keeps seeing the warning for its own jits.
+    """
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        yield
+
+# Host-side instrumentation: batched rank-k mutations dispatched to the
+# engine (one per sign block per apply). See module docstring.
+_MUTATIONS_ISSUED = 0
+
+
+def mutations_issued() -> int:
+    """Cumulative batched mutations dispatched by every store (see above)."""
+    return _MUTATIONS_ISSUED
+
+
+def _count_mutation(k: int = 1) -> None:
+    global _MUTATIONS_ISSUED
+    _MUTATIONS_ISSUED += k
+
+
+def row_dtype_for(factor_dtype) -> np.dtype:
+    """Exact host buffer dtype for rank-1 rows of a fleet of this dtype."""
+    if np.dtype(jnp.dtype(factor_dtype)) == np.dtype(np.float64):
+        return np.dtype(np.float64)
+    return np.dtype(np.float32)
+
+
+@functools.lru_cache(maxsize=64)
+def _steps_for(panel: int, backend: str, interpret: Optional[bool],
+               precision: Optional[Precision]):
+    """Donated jitted mutation steps, shared across stores with equal meta.
+
+    jit caches key on (closure identity, shapes); caching the closures here
+    means two stores with the same execution metadata — or one store timed
+    after a warmup store in the benchmark — share compiled executables.
+    """
+    meta = dict(panel=panel, backend=backend, interpret=interpret,
+                precision=precision)
+
+    def up_only(data, vup):
+        return CholFactor.from_factor(data, **meta).update(vup).data
+
+    def down_only(data, vdn):
+        f, ok = CholFactor.from_factor(data, **meta).downdate_guarded(vdn)
+        return f.data, ok
+
+    def both(data, vup, vdn):
+        f = CholFactor.from_factor(data, **meta).update(vup)
+        f, ok = f.downdate_guarded(vdn)
+        return f.data, ok
+
+    def scale(data, alpha):
+        return CholFactor.from_factor(data, **meta).scale(alpha).data
+
+    def slot_set(data, slot, block):
+        return data.at[slot].set(block.astype(data.dtype))
+
+    donate = dict(donate_argnums=0)
+    return {
+        "up": jax.jit(up_only, **donate),
+        "down": jax.jit(down_only, **donate),
+        "both": jax.jit(both, **donate),
+        "scale": jax.jit(scale, **donate),
+        "slot_set": jax.jit(slot_set, **donate),
+    }
+
+
+class FactorStore:
+    """Fleet manager over one batched ``CholFactor`` (see module docstring).
+
+    Args:
+      n: per-user factor dimension.
+      capacity: initial slot count (grows by doubling on demand).
+      width: coalesce width k — the static rank of every flush mutation
+        (blocks are zero-padded to it, so jit never re-traces on traffic).
+      panel / backend / interpret / precision: execution metadata threaded
+        onto the fleet's ``CholFactor`` (DESIGN.md §7/§8).
+      init_scale: admitted slots start as the factor of ``init_scale * I``
+        (the ridge/eps warm start).
+      dtype: logical dtype of the fleet (storage dtype under a precision
+        policy).
+    """
+
+    def __init__(self, n: int, *, capacity: int = 8, width: int = 16,
+                 panel: int = 64, backend: str = "auto",
+                 interpret: Optional[bool] = None, precision=None,
+                 init_scale: float = 1.0, dtype=jnp.float32):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        policy = Precision.parse(precision)
+        storage = jnp.dtype(dtype) if policy is None else jnp.dtype(
+            policy.storage_for(dtype))
+        self.n = n
+        self.width = width
+        self.init_scale = float(init_scale)
+        self._eye = jnp.eye(n, dtype=storage)
+        data = jnp.float32(np.sqrt(self.init_scale)) * jnp.broadcast_to(
+            self._eye, (capacity, n, n))
+        self._factor = CholFactor.from_factor(
+            jnp.asarray(data, storage), panel=panel, backend=backend,
+            interpret=interpret, precision=policy)
+        self._slot_of: Dict[object, int] = {}
+        self._user_of: Dict[int, object] = {}
+        self._free: List[int] = list(range(capacity - 1, -1, -1))
+        self._last_used: Dict[object, int] = {}
+        self._steps = _steps_for(panel, backend, interpret, policy)
+
+    # -- reconstruction (durability) ----------------------------------------
+    @classmethod
+    def from_state(cls, factor: CholFactor, *, width: int,
+                   slots: Dict[object, int], last_used: Dict[object, int],
+                   init_scale: float) -> "FactorStore":
+        """Rebuild a store around restored fleet data + slot table."""
+        if not factor.batched:
+            raise ValueError("fleet factor must be batched (B, n, n)")
+        self = cls.__new__(cls)
+        self.n = factor.n
+        self.width = width
+        self.init_scale = float(init_scale)
+        self._eye = jnp.eye(factor.n, dtype=factor.dtype)
+        self._factor = factor
+        self._slot_of = dict(slots)
+        self._user_of = {s: u for u, s in self._slot_of.items()}
+        taken = set(self._slot_of.values())
+        cap = factor.data.shape[0]
+        self._free = [s for s in range(cap - 1, -1, -1) if s not in taken]
+        self._last_used = dict(last_used)
+        self._steps = _steps_for(factor.panel, factor.backend,
+                                 factor.interpret, factor.precision)
+        return self
+
+    # -- views --------------------------------------------------------------
+    @property
+    def factor(self) -> CholFactor:
+        """The live batched fleet factor (read: solve/logdet/diagnostics)."""
+        return self._factor
+
+    @property
+    def capacity(self) -> int:
+        return self._factor.data.shape[0]
+
+    @property
+    def row_dtype(self) -> np.dtype:
+        """Host dtype buffered rows are kept in: wide enough to be exact
+        for this fleet. f64 fleets buffer f64 (anything narrower would
+        silently truncate observations); everything else — f32 and
+        narrow-storage policies like bf16 — buffers f32, which the engine
+        casts to ``L.dtype`` at dispatch without information loss."""
+        return row_dtype_for(self._factor.dtype)
+
+    @property
+    def active(self) -> int:
+        return len(self._slot_of)
+
+    def users(self):
+        return tuple(self._slot_of)
+
+    def slot(self, user) -> int:
+        return self._slot_of[user]
+
+    def has(self, user) -> bool:
+        return user in self._slot_of
+
+    def last_used(self, user) -> int:
+        return self._last_used[user]
+
+    def factor_for(self, user) -> CholFactor:
+        """A single-user view (shares the fleet's execution metadata)."""
+        return self._factor.replace(data=self._factor.data[self.slot(user)])
+
+    # -- fleet membership ---------------------------------------------------
+    def admit(self, user, *, scale: Optional[float] = None,
+              tick: int = 0) -> int:
+        """Assign ``user`` a slot warm-started at ``scale * I`` (grows the
+        fleet when full). Idempotent for already-admitted users."""
+        if user in self._slot_of:
+            self._last_used[user] = tick
+            return self._slot_of[user]
+        if not self._free:
+            self._grow()
+        s = self._free.pop()
+        block = jnp.float32(np.sqrt(
+            self.init_scale if scale is None else float(scale))) * self._eye
+        with _quiet_donation():
+            new_data = self._steps["slot_set"](
+                self._factor.data, jnp.int32(s), block)
+        self._factor = self._factor.replace(data=new_data)
+        self._slot_of[user] = s
+        self._user_of[s] = user
+        self._last_used[user] = tick
+        return s
+
+    def evict(self, user) -> int:
+        """Free a user's slot (data is reset on the next admit).
+
+        This is the slot-table primitive. A store managed by a
+        ``StreamService`` must be evicted through ``service.evict`` /
+        ``service.evict_idle`` instead — the service also owns the user's
+        coalescer, window schedule and WAL record, which this call cannot
+        see.
+        """
+        s = self._slot_of.pop(user)
+        del self._user_of[s]
+        del self._last_used[user]
+        self._free.append(s)
+        return s
+
+    def _grow(self) -> None:
+        """Double the batch axis (the one amortised O(B n^2) copy)."""
+        cap = self.capacity
+        fresh = jnp.float32(np.sqrt(self.init_scale)) * jnp.broadcast_to(
+            self._eye, (cap, self.n, self.n))
+        new_data = jnp.concatenate(
+            [self._factor.data, jnp.asarray(fresh, self._factor.dtype)])
+        self._factor = self._factor.replace(data=new_data)
+        self._free.extend(range(2 * cap - 1, cap - 1, -1))
+
+    def compact(self, *, min_capacity: int = 1) -> Dict[object, int]:
+        """Shrink the fleet to its active slots (one gather + remap).
+
+        Returns the new user -> slot mapping. The copy is explicit and
+        caller-scheduled — compaction is a maintenance event, not a serving-
+        loop step.
+        """
+        order = sorted(self._slot_of.items(), key=lambda kv: kv[1])
+        keep = [s for _, s in order]
+        new_cap = max(len(keep), min_capacity)
+        idx = keep + [0] * (new_cap - len(keep))  # pad slots: reset on admit
+        data = self._factor.data[jnp.asarray(idx, jnp.int32)]
+        self._factor = self._factor.replace(data=data)
+        self._slot_of = {u: i for i, (u, _) in enumerate(order)}
+        self._user_of = {i: u for u, i in self._slot_of.items()}
+        self._free = list(range(new_cap - 1, len(keep) - 1, -1))
+        return dict(self._slot_of)
+
+    # -- mutations ----------------------------------------------------------
+    def apply(self, Vup=None, Vdn=None):
+        """One sign-scheduled flush over the whole fleet.
+
+        Args:
+          Vup: (capacity, n, k) zero-padded update block, or None.
+          Vdn: (capacity, n, k) zero-padded downdate block, or None.
+
+        Returns:
+          (capacity,) bool feasibility verdicts when a downdate block ran
+          (slots with all-zero columns report True), else None. Exactly ONE
+          batched mutation is dispatched per non-None block — the counter
+          ``mutations_issued`` records it.
+        """
+        data = self._factor.data
+        ok = None
+        with _quiet_donation():
+            if Vup is not None and Vdn is not None:
+                _count_mutation(2)
+                data, ok = self._steps["both"](
+                    data, jnp.asarray(Vup), jnp.asarray(Vdn))
+            elif Vup is not None:
+                _count_mutation(1)
+                data = self._steps["up"](data, jnp.asarray(Vup))
+            elif Vdn is not None:
+                _count_mutation(1)
+                data, ok = self._steps["down"](data, jnp.asarray(Vdn))
+            else:
+                return None
+        self._factor = self._factor.replace(data=data)
+        return ok
+
+    def decay(self, alpha) -> None:
+        """Exponential forgetting: every slot becomes the factor of
+        ``alpha^2 A`` (exact, via the engine's ``scale``)."""
+        with _quiet_donation():
+            scaled = self._steps["scale"](self._factor.data,
+                                          jnp.float32(alpha))
+        self._factor = self._factor.replace(data=scaled)
+
+    def pad_block(self, rows_by_slot: Dict[int, np.ndarray]) -> np.ndarray:
+        """Stack per-slot row lists into the static (capacity, n, width)
+        zero-padded block ``apply`` expects (zero columns are exact no-ops
+        for both signs, so the jitted step never re-traces on traffic)."""
+        out = np.zeros((self.capacity, self.n, self.width), self.row_dtype)
+        for s, rows in rows_by_slot.items():
+            k = rows.shape[0]
+            if k > self.width:
+                raise ValueError(
+                    f"slot {s}: {k} rows exceed coalesce width {self.width}")
+            if k:
+                out[s, :, :k] = rows.T
+        return out
+
+    def __repr__(self):
+        return (f"FactorStore(n={self.n}, capacity={self.capacity}, "
+                f"active={self.active}, width={self.width}, "
+                f"factor={self._factor!r})")

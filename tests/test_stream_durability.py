@@ -1,0 +1,325 @@
+"""Durability of the streaming service: checkpoint + replay-log restarts.
+
+ISSUE 4 acceptance: kill-and-restart reproduces the exact factor state
+(allclose at storage dtype) after a simulated crash mid-buffer. Plus the
+checkpoint round-trip regression satellite: a batched ``CholFactor`` fleet
+survives ``repro.checkpoint.save``/``restore`` with aux metadata (backend,
+panel, precision) intact — previously only raw pytree leaves were
+exercised.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.core import CholFactor, Precision
+from repro.stream import (
+    FactorStore,
+    ReplayLog,
+    StreamService,
+    checkpoint_service,
+    decode_row,
+    encode_row,
+    restore_service,
+)
+from repro.stream.durability import (
+    _precision_from_json,
+    _precision_to_json,
+)
+
+
+def _rows(n, m, seed, scale=0.25):
+    rng = np.random.default_rng(seed)
+    return [(scale * rng.normal(size=n)).astype(np.float32)
+            for _ in range(m)]
+
+
+def _service(n=12, B=3, width=4, **kw):
+    st = FactorStore(n, capacity=B, width=width, panel=4,
+                     backend="reference", **kw)
+    return StreamService(st, window=6, auto_flush=False)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: fleet checkpoint round trip with aux metadata intact
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_fleet_aux_metadata_roundtrip(tmp_path):
+    """A batched CholFactor fleet survives save/restore with backend,
+    panel and precision intact — carried by the checkpoint's ``extra``
+    meta, which raw pytree leaves lose."""
+    B, n = 3, 16
+    rng = np.random.default_rng(0)
+    data = np.stack([np.linalg.cholesky(
+        (lambda M: M.T @ M + np.eye(n))(rng.normal(size=(n, n)))
+    ).T for _ in range(B)]).astype(np.float32)
+    fleet = CholFactor.from_factor(
+        jnp.asarray(data).astype(jnp.bfloat16), panel=8, backend="gemm",
+        interpret=True, precision="bf16")
+
+    aux = {"backend": fleet.backend, "panel": fleet.panel,
+           "interpret": fleet.interpret,
+           "precision": _precision_to_json(fleet.precision)}
+    ckpt.save(tmp_path, 5, {"fleet": fleet.data}, extra={"fleet_aux": aux})
+
+    meta = ckpt.read_meta(tmp_path, 5)
+    got = meta["extra"]["fleet_aux"]
+    template = {"fleet": np.zeros((B, n, n), np.dtype("float32"))}
+    # The template's dtype is irrelevant: leaves restore at stored dtype.
+    restored = ckpt.restore(tmp_path, 5, template)["fleet"]
+    rebuilt = CholFactor.from_factor(
+        jnp.asarray(restored), panel=got["panel"], backend=got["backend"],
+        interpret=got["interpret"],
+        precision=_precision_from_json(got["precision"]))
+    assert rebuilt.backend == "gemm" and rebuilt.panel == 8
+    assert rebuilt.interpret is True
+    assert rebuilt.precision == Precision(storage="bfloat16", accum="float32")
+    assert rebuilt.dtype == jnp.bfloat16 and rebuilt.batched
+    np.testing.assert_array_equal(
+        np.asarray(rebuilt.data, np.float32),
+        np.asarray(fleet.data, np.float32))
+
+
+def test_read_meta_missing_step_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ckpt.read_meta(tmp_path, 1)
+
+
+def test_row_codec_roundtrip_all_dtypes():
+    for dtype in ("float32", "bfloat16", "float64"):
+        v = (np.arange(6) * 0.5).astype(_np(dtype))
+        rec = encode_row(v)
+        back = decode_row(rec)
+        assert str(back.dtype) == dtype
+        np.testing.assert_array_equal(
+            back.astype(np.float64), v.astype(np.float64))
+
+
+def _np(name):
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def test_precision_json_roundtrip():
+    for p in (None, Precision(storage="bfloat16", accum="float32"),
+              Precision(storage=None, accum="float64")):
+        assert _precision_from_json(_precision_to_json(p)) == p
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: kill-and-restart mid-buffer
+# ---------------------------------------------------------------------------
+
+
+def test_kill_and_restart_reproduces_exact_state(tmp_path):
+    """Simulated crash mid-buffer: the survivor (checkpoint + WAL replay)
+    matches the original — fleet arrays allclose at storage dtype, pending
+    buffers and window schedule identical — and stays in lockstep through
+    the next flush."""
+    n, B, width = 12, 3, 4
+    svc = _service(n=n, B=B, width=width)
+    for u in range(B):
+        svc.admit(u)
+
+    # Phase 1: traffic + a flush, then the periodic checkpoint (buffers
+    # deliberately non-empty: rows 2 per user still unflushed).
+    for v in _rows(n, width, seed=1):
+        for u in range(B):
+            svc.push(u, v)
+    svc.flush()
+    svc.tick()
+    for v in _rows(n, 2, seed=2):
+        for u in range(B):
+            svc.push(u, v)
+    checkpoint_service(svc, tmp_path, step=1)
+
+    # Phase 2: post-checkpoint traffic — ticks, another flush (absorbing
+    # the checkpointed buffers), a decay, fresh unflushed rows. All of it
+    # lives only in the WAL.
+    svc.tick()
+    svc.flush(force=True)
+    svc.decay(0.9)
+    for v in _rows(n, 1, seed=3):
+        for u in range(B):
+            svc.push(u, v)
+    svc.tick()
+
+    # CRASH: the process dies here. Restore from disk alone.
+    survivor = restore_service(tmp_path)
+
+    assert survivor.tick_count == svc.tick_count
+    assert sorted(survivor.users()) == sorted(svc.users())
+    assert survivor.scheduled() == svc.scheduled()
+    for u in range(B):
+        assert survivor.pending(u) == svc.pending(u)
+        np.testing.assert_array_equal(
+            survivor._coalescer(u).peek()[0], svc._coalescer(u).peek()[0])
+    np.testing.assert_allclose(
+        np.asarray(survivor.store.factor.data, np.float32),
+        np.asarray(svc.store.factor.data, np.float32), atol=1e-6)
+
+    # Lockstep continues: the same future flush lands on the same state.
+    r1 = svc.flush(force=True)
+    r2 = survivor.flush(force=True)
+    assert r1.absorbed == r2.absorbed and r1.downdated == r2.downdated
+    np.testing.assert_allclose(
+        np.asarray(survivor.store.factor.data, np.float32),
+        np.asarray(svc.store.factor.data, np.float32), atol=1e-6)
+
+
+def test_restart_replays_window_schedule(tmp_path):
+    """Scheduled (not yet due) window-downdates survive the crash and fire
+    at the same tick on the survivor."""
+    n, width = 8, 2
+    svc = _service(n=n, B=1, width=width)
+    svc.admit("u")
+    for v in _rows(n, width, seed=4):
+        svc.push("u", v)
+    svc.flush()                       # schedules expiry at tick + window
+    checkpoint_service(svc, tmp_path, step=3)
+
+    survivor = restore_service(tmp_path)
+    assert survivor.scheduled() == svc.scheduled() == width
+    orig_fired = sur_fired = None
+    for _ in range(7):
+        a, b = svc.tick(), survivor.tick()
+        orig_fired = orig_fired or (a and a.downdated)
+        sur_fired = sur_fired or (b and b.downdated)
+    assert orig_fired == sur_fired == {"u": width}
+    np.testing.assert_allclose(
+        np.asarray(survivor.store.factor.data, np.float32),
+        np.asarray(svc.store.factor.data, np.float32), atol=1e-6)
+
+
+def test_restart_bf16_fleet_allclose_at_storage_dtype(tmp_path):
+    """The acceptance wording verbatim: allclose at STORAGE dtype — a bf16
+    fleet restores as bf16 and matches bitwise (checkpoint stores raw
+    bytes; replay re-runs the identical jitted mutations)."""
+    n, width = 8, 2
+    st = FactorStore(n, capacity=2, width=width, panel=4, backend="gemm",
+                     precision="bf16")
+    svc = StreamService(st, auto_flush=False)
+    svc.admit(0)
+    svc.admit(1)
+    for v in _rows(n, width, seed=6):
+        svc.push(0, v)
+    svc.flush()
+    svc.push(1, _rows(n, 1, seed=7)[0])      # crash with this unflushed
+    checkpoint_service(svc, tmp_path, step=2)
+    svc.push(0, _rows(n, 1, seed=8)[0])      # WAL-only traffic
+
+    survivor = restore_service(tmp_path)
+    assert survivor.store.factor.dtype == jnp.bfloat16
+    assert survivor.store.factor.precision == svc.store.factor.precision
+    np.testing.assert_array_equal(
+        np.asarray(survivor.store.factor.data, np.float32),
+        np.asarray(svc.store.factor.data, np.float32))
+    r1, r2 = svc.flush(force=True), survivor.flush(force=True)
+    assert r1.absorbed == r2.absorbed
+    np.testing.assert_array_equal(
+        np.asarray(survivor.store.factor.data, np.float32),
+        np.asarray(svc.store.factor.data, np.float32))
+
+
+def test_checkpoint_rotation_prunes_stale_wals(tmp_path):
+    st = FactorStore(6, capacity=1, width=2, panel=4, backend="reference")
+    svc = StreamService(st, auto_flush=False, capacity=8)
+    svc.admit("u")
+    for step in (1, 2, 3, 4, 5):
+        svc.push("u", _rows(6, 1, seed=step)[0])
+        checkpoint_service(svc, tmp_path, step=step, keep=2)
+    live = set(ckpt.all_steps(tmp_path))
+    assert live == {4, 5}
+    wals = sorted(p.name for p in tmp_path.glob("wal_*.jsonl"))
+    assert wals == ["wal_00000004_0.jsonl", "wal_00000005_0.jsonl"]
+    # And the newest is still restorable.
+    survivor = restore_service(tmp_path)
+    assert survivor.pending("u") == svc.pending("u")
+
+
+def test_recheckpointing_a_step_never_touches_its_committed_wal(tmp_path):
+    """Regression: re-using a step number seeds a FRESH segment (new
+    attempt suffix); the previously committed pair stays intact until the
+    new checkpoint commits and re-points the meta, so there is no window
+    where a committed step's WAL is truncated."""
+    st = FactorStore(6, capacity=1, width=2, panel=4, backend="reference")
+    svc = StreamService(st, auto_flush=False, capacity=8)
+    svc.admit("u")
+    svc.push("u", _rows(6, 1, seed=21)[0])
+    checkpoint_service(svc, tmp_path, step=1)
+    first_wal = ckpt.read_meta(tmp_path, 1)["extra"]["stream"]["wal"]
+    svc.push("u", _rows(6, 1, seed=22)[0])
+    checkpoint_service(svc, tmp_path, step=1)   # same step, new attempt
+    second_wal = ckpt.read_meta(tmp_path, 1)["extra"]["stream"]["wal"]
+    assert first_wal != second_wal
+    assert not (tmp_path / first_wal).exists()  # orphan pruned post-commit
+    survivor = restore_service(tmp_path)
+    assert survivor.pending("u") == 2
+    # Third same-step checkpoint: attempt numbering must be max+1, not a
+    # count of surviving files — a count would re-use (and truncate) the
+    # committed second segment after the first was pruned.
+    svc.push("u", _rows(6, 1, seed=23)[0])
+    checkpoint_service(svc, tmp_path, step=1)
+    third_wal = ckpt.read_meta(tmp_path, 1)["extra"]["stream"]["wal"]
+    assert third_wal not in (first_wal, second_wal)
+    assert restore_service(tmp_path).pending("u") == 3
+
+
+def test_failed_push_leaves_no_poison_record(tmp_path):
+    """Regression: a push that raises live (full ring) must not be logged
+    — otherwise every future replay would re-raise the same error and the
+    checkpoint+WAL pair could never be restored."""
+    st = FactorStore(6, capacity=1, width=2, panel=4, backend="reference")
+    svc = StreamService(st, auto_flush=False)   # ring capacity 4
+    svc.admit("u")
+    checkpoint_service(svc, tmp_path, step=1)
+    for v in _rows(6, 4, seed=11):
+        svc.push("u", v)
+    with pytest.raises(OverflowError):
+        svc.push("u", _rows(6, 1, seed=12)[0])  # survivable live...
+    survivor = restore_service(tmp_path)        # ...and at restore time
+    assert survivor.pending("u") == svc.pending("u") == 4
+    r1, r2 = svc.flush(force=True), survivor.flush(force=True)
+    assert r1.absorbed == r2.absorbed == {"u": 4}
+    np.testing.assert_allclose(
+        np.asarray(survivor.store.factor.data, np.float32),
+        np.asarray(svc.store.factor.data, np.float32), atol=1e-6)
+
+
+def test_wal_seed_is_on_disk_before_checkpoint_commits(tmp_path, monkeypatch):
+    """Regression: the seeded WAL segment must be complete before the
+    checkpoint's DONE marker lands — a crash between the two must leave
+    the PREVIOUS pair authoritative, never a committed step with missing
+    buffers."""
+    svc = _service(n=6, B=1, width=2)
+    svc.admit("u")
+    svc.push("u", _rows(6, 1, seed=13)[0])
+
+    seen = {}
+    real_save = ckpt.save
+
+    def spy_save(ckpt_dir, step, tree, **kw):
+        (wal,) = tmp_path.glob(f"wal_{step:08d}_*.jsonl")
+        seen["ops"] = [r["op"] for r in ReplayLog.read(wal)]
+        return real_save(ckpt_dir, step, tree, **kw)
+
+    monkeypatch.setattr(
+        "repro.stream.durability.ckpt.save", spy_save)
+    checkpoint_service(svc, tmp_path, step=1)
+    assert seen["ops"] == ["buffer"], (
+        "unflushed buffer must be in the WAL before save commits")
+
+
+def test_replay_log_read_missing_and_append(tmp_path):
+    assert ReplayLog.read(tmp_path / "nope.jsonl") == []
+    log = ReplayLog(tmp_path / "wal.jsonl")
+    log.append({"op": "tick"})
+    log.append({"op": "flush", "force": True})
+    log.close()
+    recs = ReplayLog.read(tmp_path / "wal.jsonl")
+    assert [r["op"] for r in recs] == ["tick", "flush"]
