@@ -3,8 +3,15 @@
 Benchmarks both sharded strategies: the distributed fused composition (one
 Pallas launch per shard per update, DESIGN.md §7) and the per-panel GEMM
 driver, with the launch-count instrumentation asserting the one-launch
-claim. Subprocess with forced device count so the main bench process keeps
-its single-device config.
+claim — plus the FLEET axis (DESIGN.md §10): stacked (B, n, n) fleets,
+each member column-sharded, absorbing one rank-k update per member, with
+``launches_traced`` recorded per fleet size to show launches scale with
+shards, never with B. Subprocess with forced device count so the main
+bench process keeps its single-device config.
+
+Rows land in ``benchmarks/results/BENCH_distributed.json`` (their axes —
+device count and fleet size — would make the shared cholupdate trajectory
+unqueryable; see benchmarks/snapshot.py).
 """
 from __future__ import annotations
 
@@ -48,18 +55,44 @@ for strategy in ("fused", "gemm"):
         out.append({"strategy": strategy, "devices": shape[0], "us": dt * 1e6,
                     "err": err, "panel": panel, "launches_per_shard": traced,
                     "launches_expected": sharded_k.launch_count_sharded(n, panel, strategy=strategy)})
+
+# --- fleet axis (DESIGN.md S10): stacked sharded fleets, 4 shards ---------
+nf = %(nf)d
+Bf = rng.uniform(size=(nf, nf)).astype(np.float32)
+Af = Bf.T @ Bf + np.eye(nf, dtype=np.float32)
+Lf = jnp.array(np.linalg.cholesky(Af).T)
+Vf = jnp.array(rng.uniform(size=(nf, k)).astype(np.float32))
+mesh4 = make_mesh_compat((4,), ("model",), devices=jax.devices()[:4])
+for fleet in (1, 4, 8):
+    Lb = jnp.broadcast_to(Lf, (fleet, nf, nf))
+    Vb = jnp.broadcast_to(Vf, (fleet, nf, k))
+    before = sharded_k.launches_traced()
+    with mesh4:
+        fn = lambda: chol_update_sharded(Lb, Vb, sigma=1, mesh=mesh4, axis="model", panel=panel, strategy="fused")
+        r = jax.block_until_ready(fn())
+        traced = sharded_k.launches_traced() - before
+        t0 = time.perf_counter()
+        for _ in range(3):
+            r = jax.block_until_ready(fn())
+        dt = (time.perf_counter() - t0) / 3
+    err = float(jnp.max(jnp.abs(r[0] - ref.chol_update_ref(Lf, Vf, sigma=1))))
+    out.append({"strategy": "fleet_fused", "devices": 4, "fleet": fleet,
+                "us": dt * 1e6, "us_per_member": dt * 1e6 / fleet,
+                "err": err, "panel": panel, "launches_per_shard": traced,
+                "launches_expected": 1})
 print(json.dumps(out))
 """
 
 
 def run(csv_rows, *, quick=False):
     n = 512 if quick else 1024
+    nf = 256 if quick else 512  # fleet members are the "outgrew one device" size
     repo = Path(__file__).resolve().parent.parent
     env = dict(os.environ)
     env["PYTHONPATH"] = f"{repo / 'src'}:{env.get('PYTHONPATH', '')}"
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     res = subprocess.run(
-        [sys.executable, "-c", textwrap.dedent(_CODE % {"n": n})],
+        [sys.executable, "-c", textwrap.dedent(_CODE % {"n": n, "nf": nf})],
         capture_output=True, text=True, env=env, timeout=900,
     )
     if res.returncode != 0:
@@ -69,6 +102,15 @@ def run(csv_rows, *, quick=False):
     base = {r["strategy"]: r["us"] for r in rows if r["devices"] == 1}
     for r in rows:
         s = r["strategy"]
+        if "fleet" in r:
+            csv_rows.append(
+                (f"distributed/fleet_fused/n{nf}/dev4/B{r['fleet']}", r["us"],
+                 f"err={r['err']:.2e} us_per_member={r['us_per_member']:.1f} "
+                 f"launches_per_shard={r['launches_per_shard']} "
+                 f"expected={r['launches_expected']} "
+                 "(launches scale with shards, not B)")
+            )
+            continue
         csv_rows.append(
             (f"distributed/cholupdate_{s}/n{n}/dev{r['devices']}", r["us"],
              f"err={r['err']:.2e} speedup_vs_1dev={base[s] / r['us']:.2f}x "

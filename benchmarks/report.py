@@ -125,6 +125,23 @@ def stream_table(rec):
     return "\n".join(lines + [""] + extras)
 
 
+def distributed_table(rec):
+    """BENCH_distributed.json rows: device scaling + the fleet axis
+    (launches per shard vs fleet size, DESIGN.md §10)."""
+    lines = [
+        "| row | us | err | launches/shard | expected |",
+        "|---|---|---|---|---|",
+    ]
+    for row in rec.get("rows", []):
+        d = parse_derived(row["derived"])
+        lines.append(
+            f"| {row['name']} | {row['us']:.1f} | {d.get('err', '—')} "
+            f"| {d.get('launches_per_shard', '—')} "
+            f"| {d.get('expected', '—')} |"
+        )
+    return "\n".join(lines)
+
+
 def snapshot_sections():
     chol = load_snapshot("BENCH_cholupdate.json")
     for rec in reversed(chol):  # newest record that carries the dtype axis
@@ -140,6 +157,12 @@ def snapshot_sections():
         print(f"\n### Streaming service ({rec['commit']}, "
               f"backend={rec['backend']})\n")
         print(stream_table(rec))
+    dist = load_snapshot("BENCH_distributed.json")
+    if dist:
+        rec = dist[-1]
+        print(f"\n### Distributed / sharded fleets ({rec['commit']}, "
+              f"backend={rec['backend']})\n")
+        print(distributed_table(rec))
 
 
 def main():

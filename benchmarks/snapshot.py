@@ -6,10 +6,12 @@
     {"ts": ..., "commit": ..., "backend": ..., "quick": ...,
      "rows": [{"name": ..., "us": ..., "derived": ...}, ...]}
 
-Suites map to snapshot files: the kernel/cholupdate/distributed/optimizer
-suites share ``benchmarks/results/BENCH_cholupdate.json``; the streaming-
-service suite lands in ``BENCH_stream.json`` (its axis is coalesce width,
-not problem size — mixing the two would make both trajectories unqueryable).
+Suites map to snapshot files: the kernel/cholupdate/optimizer suites share
+``benchmarks/results/BENCH_cholupdate.json``; the streaming-service suite
+lands in ``BENCH_stream.json`` (its axis is coalesce width, not problem
+size) and the distributed suite in ``BENCH_distributed.json`` (its axes
+are device count and fleet size, DESIGN.md §10) — mixing differently-axed
+suites would make every trajectory unqueryable.
 
 Every future PR that touches a hot path runs the same script; each file
 then holds the before/after pair (and the whole history), so regressions
@@ -29,6 +31,7 @@ from pathlib import Path
 RESULTS = Path(__file__).resolve().parent / "results"
 SNAPSHOT = RESULTS / "BENCH_cholupdate.json"
 SNAPSHOT_STREAM = RESULTS / "BENCH_stream.json"
+SNAPSHOT_DISTRIBUTED = RESULTS / "BENCH_distributed.json"
 
 
 def _git_commit() -> str:
@@ -72,11 +75,12 @@ def main() -> None:
     )
 
     # suite -> (runner, snapshot file): the stream suite's axis (coalesce
-    # width) gets its own trajectory file.
+    # width) and the distributed suite's axes (device count, fleet size)
+    # each get their own trajectory file.
     suites = {
         "cholupdate": (cholupdate_bench.run, SNAPSHOT),
         "kernels": (kernel_bench.run, SNAPSHOT),
-        "distributed": (distributed_bench.run, SNAPSHOT),
+        "distributed": (distributed_bench.run, SNAPSHOT_DISTRIBUTED),
         "optimizer": (optimizer_bench.run, SNAPSHOT),
         "stream": (stream_bench.run, SNAPSHOT_STREAM),
     }

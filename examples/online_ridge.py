@@ -8,7 +8,7 @@ rows and ``.downdate``s the batch falling out of the window — never
 refactorizing — and reads the solution back with ``.solve``. Compares
 against the exact windowed solve.
 
-Two modes:
+Two modes (plus a placement flag):
 
 * single  — one stream, the paper's original workload (serial reference
   backend picked by the registry heuristic).
@@ -18,8 +18,14 @@ Two modes:
   paper's k=16 sweet spot, and absorbed as fused batched rank-k flushes
   over one ``CholFactor`` fleet — with the sliding window handled as
   deferred, coalesced downdates scheduled by the service.
+* --sharded — the batched fleet with every member column-sharded over a
+  4-way mesh (DESIGN.md §10): the "per-user factor outgrew one device"
+  regime, still riding the same coalesced flush path (one kernel launch
+  per shard per sign block, independent of the fleet size). Re-execs with
+  4 emulated host devices when the machine has only one.
 
-Run:  PYTHONPATH=src python examples/online_ridge.py [--batched] [--users B]
+Run:  PYTHONPATH=src python examples/online_ridge.py [--batched|--sharded]
+      [--users B]
 """
 import argparse
 import collections
@@ -28,7 +34,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import CholFactor
+from repro.runtime.compat import ensure_host_devices, make_mesh_compat
 from repro.stream import FactorStore, StreamService, mutations_issued
+
+SHARDS = 4
 
 
 def run_single(*, d=64, batch=8, window_batches=4, steps=12, lam=1e-1, seed=0):
@@ -71,7 +80,7 @@ def run_single(*, d=64, batch=8, window_batches=4, steps=12, lam=1e-1, seed=0):
 
 
 def run_batched(*, users=4, d=64, batch=8, window_batches=4, steps=8,
-                lam=1e-1, panel=32, width=16, seed=0):
+                lam=1e-1, panel=32, width=16, seed=0, sharded=False):
     """A fleet of independent sliding-window ridge streams, one per user,
     served through ``repro.stream``.
 
@@ -81,11 +90,26 @@ def run_batched(*, users=4, d=64, batch=8, window_batches=4, steps=8,
     guarded batched downdate) — the coalescing economics the subsystem
     exists for: rows/mutation approaches the paper's k=16 sweet spot
     instead of 2*users*steps separate device calls.
+
+    With ``sharded=True`` every member of the fleet is column-sharded over
+    a ``SHARDS``-way mesh (DESIGN.md §10) and the flushes dispatch through
+    the fleet-native distributed driver — same service, same coalescer,
+    one launch per shard per sign block.
     """
     rng = np.random.default_rng(seed)
     true_w = rng.normal(size=(users, d)).astype(np.float32)
-    store = FactorStore(d, capacity=users, width=width, panel=panel,
-                        backend="fused", init_scale=lam)
+    if sharded:
+        import jax
+
+        mesh = make_mesh_compat((SHARDS,), ("model",),
+                                devices=jax.devices()[:SHARDS])
+        store = FactorStore(d, capacity=users, width=width,
+                            panel=min(panel, d // SHARDS),
+                            backend="sharded", mesh=mesh, axis="model",
+                            init_scale=lam)
+    else:
+        store = FactorStore(d, capacity=users, width=width, panel=panel,
+                            backend="fused", init_scale=lam)
     svc = StreamService(store, window=window_batches, auto_flush=False)
     for u in range(users):
         svc.admit(u)
@@ -151,9 +175,15 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--batched", action="store_true",
                     help="run the fleet-of-users batched mode")
+    ap.add_argument("--sharded", action="store_true",
+                    help="batched fleet with column-sharded members over a "
+                         f"{SHARDS}-way mesh (emulated if needed)")
     ap.add_argument("--users", type=int, default=4)
     args = ap.parse_args()
-    if args.batched:
+    if args.sharded:
+        ensure_host_devices(SHARDS)
+        run_batched(users=args.users, sharded=True)
+    elif args.batched:
         run_batched(users=args.users)
     else:
         run_single()

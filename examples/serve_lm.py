@@ -17,8 +17,15 @@ Two stages, both fleet-shaped:
    At every flush boundary the per-user preference weights are read back
    with ``.solve`` and checked against the exact windowed regression.
 
-Run:  PYTHONPATH=src python examples/serve_lm.py
+With ``--sharded`` the sidecar's fleet members are each column-sharded
+over a 4-way mesh (DESIGN.md §10) — the regime where one user's
+preference statistics outgrow a device — and every flush still costs one
+kernel launch per shard per sign block, independent of the batch size.
+Re-execs with emulated host devices when the machine has only one.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--sharded]
 """
+import argparse
 import collections
 
 import jax
@@ -29,16 +36,21 @@ from repro.configs import get_config
 from repro.data import DataConfig, SyntheticTokens
 from repro.launch.serve import generate
 from repro.models import init_model, split_params
+from repro.runtime.compat import ensure_host_devices, make_mesh_compat
 from repro.stream import FactorStore, StreamService, mutations_issued
+
+SHARDS = 4
 
 
 def personalize(token_stream, *, d_feat=32, width=8, window=16, lam=1e-1,
-                panel=16, seed=0):
+                panel=16, seed=0, sharded=False):
     """Per-user online ridge over the generated tokens, one streamed fleet.
 
     token_stream: (B, T) generated token ids. Returns (max tracking error
     of the maintained solution vs the exact windowed solve at every flush
-    boundary, batched mutations issued, rank-1 rows absorbed).
+    boundary, batched mutations issued, rank-1 rows absorbed). With
+    ``sharded=True`` the fleet members are column-sharded over a
+    ``SHARDS``-way mesh and flushes dispatch per-shard (DESIGN.md §10).
     """
     B, T = token_stream.shape
     rng = np.random.default_rng(seed)
@@ -49,10 +61,18 @@ def personalize(token_stream, *, d_feat=32, width=8, window=16, lam=1e-1,
     )
     true_pref = np.asarray(rng.normal(size=(B, d_feat)).astype(np.float32))
 
-    # The streaming subsystem: one fused-backend fleet, rank-1 pushes
-    # coalesced to width-k flushes, sliding window via scheduled downdates.
-    store = FactorStore(d_feat, capacity=B, width=width, panel=panel,
-                        backend="fused", init_scale=lam)
+    # The streaming subsystem: one fleet, rank-1 pushes coalesced to
+    # width-k flushes, sliding window via scheduled downdates.
+    if sharded:
+        mesh = make_mesh_compat((SHARDS,), ("model",),
+                                devices=jax.devices()[:SHARDS])
+        store = FactorStore(d_feat, capacity=B, width=width,
+                            panel=min(panel, d_feat // SHARDS),
+                            backend="sharded", mesh=mesh, axis="model",
+                            init_scale=lam)
+    else:
+        store = FactorStore(d_feat, capacity=B, width=width, panel=panel,
+                            backend="fused", init_scale=lam)
     svc = StreamService(store, window=window, auto_flush=False)
     for u in range(B):
         svc.admit(u)
@@ -101,7 +121,7 @@ def personalize(token_stream, *, d_feat=32, width=8, window=16, lam=1e-1,
     return max_err, mutations_issued() - muts0, rows_pushed
 
 
-def main():
+def main(*, sharded=False):
     cfg = get_config("h2o-danube-1.8b").reduced()
     key = jax.random.PRNGKey(0)
     values, _ = split_params(init_model(key, cfg))
@@ -112,8 +132,10 @@ def main():
                          cache_len=prompt_len + gen, temperature=0.8)
     print(f"generated {toks.shape} tokens at {tps:.1f} tok/s (batch {batch})")
 
-    err, muts, rows = personalize(np.asarray(toks[:, prompt_len:]))
-    print(f"personalization sidecar: fleet of {batch} per-user factors, "
+    err, muts, rows = personalize(np.asarray(toks[:, prompt_len:]),
+                                  sharded=sharded)
+    print(f"personalization sidecar: fleet of {batch} per-user factors"
+          f"{f' ({SHARDS}-way sharded members)' if sharded else ''}, "
           f"{rows} rank-1 rows coalesced into {muts} batched rank-k "
           f"mutations ({rows / max(muts, 1):.1f} rows/mutation), "
           f"max err vs exact windowed solve = {err:.3e}")
@@ -124,4 +146,11 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sharded", action="store_true",
+                    help="column-shard the sidecar fleet's members over a "
+                         f"{SHARDS}-way mesh (emulated if needed)")
+    args = ap.parse_args()
+    if args.sharded:
+        ensure_host_devices(SHARDS)
+    main(sharded=args.sharded)

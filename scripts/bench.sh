@@ -11,8 +11,10 @@
 #                                 # bytes-per-update land in the snapshot)
 #
 # The stream suite (coalesce-width sweep, DESIGN.md §9) appends to its own
-# trajectory file benchmarks/results/BENCH_stream.json; everything else
-# shares BENCH_cholupdate.json. Render both with `python -m benchmarks.report`.
+# trajectory file benchmarks/results/BENCH_stream.json, and the distributed
+# suite (device-scaling + sharded-fleet axis, DESIGN.md §10) to
+# BENCH_distributed.json; everything else shares BENCH_cholupdate.json.
+# Render all three with `python -m benchmarks.report`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

@@ -40,6 +40,10 @@ maintained factor never trace the underlying recurrence or kernel.
 backend over stacked ``(B, n, n)`` factors — the serving workload of many
 concurrent per-user updates. Both default to ``method='auto'`` and resolve
 the heuristic ONCE per batch (same funnel as the single-factor path).
+``method='sharded'`` is the exception: the distributed driver consumes the
+stacked fleet natively (DESIGN.md §10) — each member column-sharded over
+the mesh axis, the batch folded into the one-per-shard kernel launch — so
+the batched wrapper routes it through without vmapping.
 
 The stateful-factor object API (update/downdate/solve/logdet on one carried
 value) lives in ``repro.core.factor.CholFactor``; these functions remain as
@@ -152,6 +156,14 @@ def chol_update(
         )
     if sigma not in (1, -1):
         raise ValueError(f"sigma must be +1 or -1, got {sigma}")
+    if L.ndim == 3 and method != "sharded":
+        # Only the sharded driver consumes a stacked fleet natively (it
+        # folds the batch into its per-shard launch); every other backend
+        # batches through the vmapping wrapper.
+        raise ValueError(
+            "stacked (B, n, n) factors go through chol_update_batched "
+            f"(method={method!r})"
+        )
     if V.ndim == 1:
         V = V[:, None]
     if V.dtype != L.dtype:
@@ -205,7 +217,14 @@ def chol_update_batched(
             f"V must be (B, n, k) matching L {L.shape}, got {V.shape}"
         )
     if method == "sharded":
-        raise ValueError("method='sharded' does not support the batched API")
+        # The sharded driver consumes the stacked fleet natively (chain
+        # phase vmapped — one psum-gather per panel for the whole batch —
+        # and B folded into the per-shard kernel grid), so it must NOT be
+        # vmapped here: launches scale with shards, never with B.
+        return chol_update(
+            L, V, sigma=sigma, method="sharded", panel=panel,
+            interpret=interpret, precision=precision, **opts,
+        )
     # Resolve the heuristic ONCE for the batch (not per vmapped element).
     method = backends.resolve(method, n=L.shape[-1], panel=panel,
                               interpret=interpret)

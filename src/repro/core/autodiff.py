@@ -37,9 +37,20 @@ import jax
 import jax.numpy as jnp
 
 
+def _mT(x):
+    """Matrix transpose over the last two axes (batched-safe ``.T``)."""
+    return jnp.swapaxes(x, -1, -2)
+
+
 def _psi(M):
-    """Upper-triangular half-diagonal projector: triu(M) - diag(M)/2."""
-    return jnp.triu(M) - 0.5 * jnp.diag(jnp.diagonal(M))
+    """Upper-triangular half-diagonal projector: triu(M) - diag(M)/2.
+
+    Operates on the trailing two axes, so stacked ``(B, n, n)`` operands
+    (the sharded-batched fleet path) go through the same rule.
+    """
+    d = jnp.diagonal(M, axis1=-2, axis2=-1)
+    eye = jnp.eye(M.shape[-1], dtype=M.dtype)
+    return jnp.triu(M) - 0.5 * eye * d[..., None, :]
 
 
 @functools.partial(jax.custom_jvp, nondiff_argnums=(0, 1))
@@ -48,7 +59,10 @@ def diffable_update(impl, sigma, L, V):
 
     ``impl`` must be a hashable callable (use a cached functools.partial so
     jit caches stay warm); ``sigma`` is static. ``V`` must already be
-    ``(n, k)`` — normalise vectors before calling.
+    ``(n, k)`` — normalise vectors before calling. Stacked ``(B, n, n)`` /
+    ``(B, n, k)`` operands are supported (every step of the tangent map
+    below acts on the trailing two axes), which is what lets the batched
+    sharded driver keep ``jax.grad`` without a per-element vmap.
     """
     return impl(L, V, sigma)
 
@@ -71,10 +85,12 @@ def _diffable_update_jvp(impl, sigma, primals, tangents):
     dLh, dVh = dL.astype(acc), dV.astype(acc)
     Lnh = L_new.astype(acc)
     # dA~ = d(L^T L) + sigma d(V V^T), symmetric by construction.
-    dA = dLh.T @ Lh + Lh.T @ dLh + sigma * (dVh @ Vh.T + Vh @ dVh.T)
+    dA = (_mT(dLh) @ Lh + _mT(Lh) @ dLh
+          + sigma * (dVh @ _mT(Vh) + Vh @ _mT(dVh)))
     # M = L~^{-T} dA~ L~^{-1} via two triangular solves against the output
     # factor (both linear in the tangent, hence transposable for the VJP).
     X = jax.scipy.linalg.solve_triangular(Lnh, dA, trans=1, lower=False)
-    M = jax.scipy.linalg.solve_triangular(Lnh, X.T, trans=1, lower=False).T
+    M = _mT(jax.scipy.linalg.solve_triangular(Lnh, _mT(X), trans=1,
+                                              lower=False))
     dL_new = _psi(M) @ Lnh
     return L_new, dL_new.astype(L_new.dtype)

@@ -30,6 +30,17 @@ Three strategies share that decomposition:
 Finalized columns (global index < panel start) hold zeros in the active rows,
 which every strategy maps to zeros, so devices do uniform-shape work with no
 load imbalance; the triangular waste is accounted for in the §Perf analysis.
+
+**Batched fleets (DESIGN.md §10).** ``L`` may be a stacked ``(B, n, n)``
+fleet whose members are EACH column-sharded over the same mesh axis
+(sharding spec ``P(None, None, axis)``): the serving-fleet composition for
+per-user factors that outgrow one device. The chain phase vmaps over the
+batch — which folds every per-panel psum-gather into ONE collective of a
+``(B, P+k, P)`` stacked operand, not B collectives — and the fused panel
+phase folds the batch into the grid of the SAME per-shard kernel, so a
+whole fleet's rank-k update still costs exactly one Pallas launch per
+shard: launches scale with shards (× sign blocks at the stream layer),
+never with B.
 """
 from __future__ import annotations
 
@@ -49,8 +60,15 @@ AxisNames = Union[str, Sequence[str]]
 STRATEGIES = ("fused", "gemm", "paper")
 
 
-def _axis_tuple(axis: AxisNames):
+def axis_tuple(axis: AxisNames):
+    """Canonical tuple form of a mesh-axis binding (str, tuple, or list).
+
+    The one normalization every consumer shares — the sharded driver, the
+    fleet placement and step-cache keys in ``repro.stream.store``."""
     return (axis,) if isinstance(axis, str) else tuple(axis)
+
+
+_axis_tuple = axis_tuple  # internal alias (pre-existing call sites)
 
 
 def _combined_axis_index(axes, mesh):
@@ -73,11 +91,13 @@ def chol_update_sharded(
     interpret: Optional[bool] = None,
     precision: Optional[Precision] = None,
 ):
-    """Rank-k up/down-date of a column-sharded factor.
+    """Rank-k up/down-date of a column-sharded factor (or stacked fleet).
 
     Args:
-      L: (n, n) upper factor, sharded ``P(None, axis)`` (or reshardable to it).
-      V: (n, k) modification, replicated.
+      L: (n, n) upper factor, sharded ``P(None, axis)`` (or reshardable to
+        it) — or a stacked fleet ``(B, n, n)``, each member column-sharded
+        ``P(None, None, axis)``.
+      V: (n, k) modification, replicated — ``(B, n, k)`` for a fleet.
       sigma: +1 / -1.
       mesh: the jax Mesh holding ``axis``.
       axis: mesh axis name (or tuple of names) the columns are sharded over.
@@ -105,8 +125,17 @@ def chol_update_sharded(
         V = precision.cast_storage(V)
     accum_dtype = None if precision is None else jnp.dtype(precision.accum)
     axes = _axis_tuple(axis)
-    n = L.shape[0]
-    k = V.shape[1] if V.ndim == 2 else 1
+    batched = L.ndim == 3
+    n = L.shape[-1]
+    if batched:
+        if V.ndim == 2:
+            V = V[:, :, None]
+        if V.shape[:2] != (L.shape[0], n):
+            raise ValueError(
+                f"V must be (B, n, k) matching L {L.shape}, got {V.shape}")
+        k = V.shape[-1]
+    else:
+        k = V.shape[1] if V.ndim == 2 else 1
     n_shards = 1
     for ax in axes:
         n_shards *= mesh.shape[ax]
@@ -125,9 +154,12 @@ def chol_update_sharded(
         # The fused strategy's per-shard kernel is Mosaic-only (like the
         # fused single-device kernel): compile on TPU, interpret elsewhere.
         interpret = default_interpret(mosaic_only=True)
-    vt = jnp.reshape(V, (n, k)).T
-
-    col_spec = P(None, axes)
+    if batched:
+        vt = jnp.swapaxes(V, -1, -2)  # (B, k, n)
+        col_spec = P(None, None, axes)
+    else:
+        vt = jnp.reshape(V, (n, k)).T
+        col_spec = P(None, axes)
     if strategy == "fused":
         fn = functools.partial(
             _sharded_update_fused, sigma=sigma, axes=axes, mesh=mesh,
@@ -172,20 +204,20 @@ def _gather_diag(L_loc, vt, p, *, panel, w_loc, me, axes):
 # ---------------------------------------------------------------------------
 
 
-def _sharded_update_fused(L_loc, vt_loc, *, sigma, axes, mesh, panel, w_loc,
-                          interpret, accum_dtype=None):
-    from repro.kernels import sharded as sharded_k
+def _chain_phase(L_loc, vt_loc, *, sigma, axes, panel, w_loc, me, gcol,
+                 accum_dtype=None):
+    """The chain phase for ONE factor's local shard (jnp, no kernels).
 
+    Row-panels of L are never written here, so every slice below reads
+    ORIGINAL factor data; the only sequential state is vt. Under
+    ``jax.vmap`` (the batched fleet path) the per-panel psum-gather
+    becomes a single collective over the stacked ``(B, P+k, P)`` operand —
+    one gather per panel for the whole fleet, independent of B.
+    """
     n = L_loc.shape[0]
-    me = _combined_axis_index(axes, mesh)
-    dev_off = me * w_loc
-    gcol = dev_off + jnp.arange(w_loc)
     n_panels = n // panel
     acc_t = accum_dtype or jnp.float32
 
-    # --- chain phase: every diagonal recurrence + the V^T evolution -------
-    # Row-panels of L are never written here, so every slice below reads
-    # ORIGINAL factor data; the only sequential state is vt.
     def chain_body(vt, p):
         r0 = p * panel
         d_blk, vtd_g = _gather_diag(L_loc, vt, p, panel=panel, w_loc=w_loc,
@@ -208,9 +240,26 @@ def _sharded_update_fused(L_loc, vt_loc, *, sigma, axes, mesh, panel, w_loc,
         vt_new = jnp.where(in_block[None, :], jnp.zeros_like(vt_new), vt_new)
         return vt_new, (T, D_new, vt_in)
 
-    _, (T_stack, D_stack, vt_stack) = jax.lax.scan(
-        chain_body, vt_loc, jnp.arange(n_panels)
+    _, stacks = jax.lax.scan(chain_body, vt_loc, jnp.arange(n_panels))
+    return stacks  # (T_stack, D_stack, vt_stack)
+
+
+def _sharded_update_fused(L_loc, vt_loc, *, sigma, axes, mesh, panel, w_loc,
+                          interpret, accum_dtype=None):
+    from repro.kernels import sharded as sharded_k
+
+    me = _combined_axis_index(axes, mesh)
+    gcol = me * w_loc + jnp.arange(w_loc)
+    chain = functools.partial(
+        _chain_phase, sigma=sigma, axes=axes, panel=panel, w_loc=w_loc,
+        me=me, gcol=gcol, accum_dtype=accum_dtype,
     )
+    if L_loc.ndim == 3:
+        # Stacked fleet shard: vmap the chain (one psum per panel for the
+        # whole batch), then fold B into the grid of the SAME launch.
+        T_stack, D_stack, vt_stack = jax.vmap(chain)(L_loc, vt_loc)
+    else:
+        T_stack, D_stack, vt_stack = chain(L_loc, vt_loc)
 
     # --- panel phase: the whole update in ONE launch on this shard --------
     return sharded_k.panel_apply_sharded(
@@ -227,6 +276,14 @@ def _sharded_update_fused(L_loc, vt_loc, *, sigma, axes, mesh, panel, w_loc,
 
 def _sharded_update_perpanel(L_loc, vt_loc, *, sigma, axes, mesh, panel,
                              w_loc, strategy, accum_dtype=None):
+    if L_loc.ndim == 3:
+        # Stacked fleet shard: vmap the whole per-panel driver. The psum
+        # inside batches into one collective per panel (jnp only — no
+        # kernels to fold).
+        return jax.vmap(functools.partial(
+            _sharded_update_perpanel, sigma=sigma, axes=axes, mesh=mesh,
+            panel=panel, w_loc=w_loc, strategy=strategy,
+            accum_dtype=accum_dtype))(L_loc, vt_loc)
     n = L_loc.shape[0]
     me = _combined_axis_index(axes, mesh)
     dev_off = me * w_loc

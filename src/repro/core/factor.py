@@ -23,6 +23,11 @@ behaviour you want.
 Batching: ``data`` may be ``(B, n, n)`` — a fleet of per-user factors. All
 methods vmap over the leading axis automatically, and updates still cost
 one device launch on the fused backend (vmap folds B into the kernel grid).
+Batching composes with sharding (DESIGN.md §10): a batched factor bound to
+a mesh (``backend='sharded'``, ``mesh=``, ``axis=``) holds a fleet whose
+members are EACH column-sharded ``P(None, None, axis)`` — factors too big
+for one device — and mutations still cost ONE kernel launch per shard for
+the whole fleet (the batch folds into the per-shard grid).
 
 Every mutation dispatches through the backend registry
 (``repro.core.backends``) wrapped in the Murray derivative rules
@@ -59,6 +64,9 @@ class CholFactor:
         and the running V^T in bfloat16 while the diagonal recurrence,
         rotation state and GEMM accumulation stay fp32 (DESIGN.md §8).
       mesh, axis: mesh binding for the 'sharded' backend (None otherwise).
+        Valid for both single ``(n, n)`` and batched ``(B, n, n)`` data —
+        the batched-sharded composition routes through the fleet-native
+        distributed driver.
     """
 
     data: jax.Array
@@ -130,9 +138,9 @@ class CholFactor:
     def _mutate(self, V, sigma: int) -> "CholFactor":
         opts = {}
         if self.backend == "sharded":
-            if self.batched:
-                raise ValueError("sharded backend does not support batched "
-                                 "factors; shard the batch axis instead")
+            if self.mesh is None:
+                raise ValueError("sharded backend requires a mesh binding "
+                                 "(CholFactor(..., mesh=, axis=))")
             opts = {"mesh": self.mesh, "axis": self.axis}
         if self.batched:
             new = api.chol_update_batched(
@@ -161,9 +169,23 @@ class CholFactor:
         the *unchanged* factor where it does not (``ok`` reports which).
         Both branches are computed (jnp.where semantics) — this is the jit-
         and vmap-safe guard for serving-time downdates of untrusted data.
+
+        On the sharded backend the verdict comes from the downdated
+        factor's diagonal (already psum-gathered and replicated by the
+        chain phase) instead of ``downdate_feasible``'s triangular-solve
+        criterion: the solve reads full rows, which a column-sharded
+        layout would have to all-gather per guard, and the old
+        ``ok[..., None, None]`` masking silently assumed those full rows
+        were local. The recurrence leaves a non-positive or non-finite
+        diagonal exactly when ``A - V V^T`` exits the PD cone, so the
+        diagonal IS the feasibility verdict — at zero extra collectives.
         """
-        ok = self.downdate_feasible(V)
         down = self.downdate(V)
+        if self.backend == "sharded":
+            diag = jnp.diagonal(down.data, axis1=-2, axis2=-1)
+            ok = jnp.all(jnp.isfinite(diag) & (diag > 0), axis=-1)
+        else:
+            ok = self.downdate_feasible(V)
         mask = ok[..., None, None] if self.batched else ok
         new = jnp.where(mask, down.data, self.data)
         return dataclasses.replace(self, data=new), ok

@@ -24,6 +24,14 @@ the scalar-prefetched offset is available to every grid step without an
 HBM round-trip. The chain-phase products ride as VMEM operands indexed by
 the grid's panel coordinate.
 
+**Batched fleets (DESIGN.md §10).** A ``(B, n, w_loc)`` shard of a stacked
+fleet folds the batch into the SAME launch: the grid becomes
+``(B, n_panels, local_tiles)`` and every block spec gains a leading batch
+coordinate — B fleet members' whole updates still cost one ``pallas_call``
+per shard, so launch count scales with shards (and sign blocks), never
+with B. This is the composition the serving fleet needs for per-user
+factors that outgrow one device.
+
 ``launches_traced()`` exposes the instrumentation counter benchmarks and
 tests assert the one-launch claim with (the sharded analogue of
 ``repro.kernels.fused.launch_count``).
@@ -49,17 +57,34 @@ def launches_traced() -> int:
 
 
 def _panel_kernel(off_ref, t_ref, d_ref, vt_ref, l_ref, l_out, *, panel,
-                  accum_dtype=None):
-    p = pl.program_id(0)
-    t = pl.program_id(1)
+                  accum_dtype=None, batched=False):
+    # Grid: (n_panels, local_tiles), with a leading batch coordinate when
+    # a stacked fleet shard rides the same launch. The batch member is
+    # fully selected by the block specs, so the kernel body only has to
+    # skip the leading singleton block axis.
+    base = 1 if batched else 0
+    p = pl.program_id(base)
+    t = pl.program_id(base + 1)
     g = off_ref[0] + t  # global tile index of local tile t
+
+    def _blk(ref):
+        return ref[0, 0] if batched else ref[0]
+
+    def _tile(ref):
+        return ref[0] if batched else ref[...]
+
+    def _store(val):
+        if batched:
+            l_out[0] = val
+        else:
+            l_out[...] = val
 
     @pl.when(p < g)
     def _apply():
         acc_t = accum_dtype or jnp.float32
-        T = t_ref[0]
-        R = l_ref[...]
-        vtt = vt_ref[0]
+        T = _blk(t_ref)
+        R = _tile(l_ref)
+        vtt = _blk(vt_ref)
         if R.dtype != T.dtype:
             # Low-precision storage policy: bf16 shard tiles / V^T snapshots
             # under fp32 chain-phase transforms — upcast in VREGs, accumulate
@@ -68,18 +93,18 @@ def _panel_kernel(off_ref, t_ref, d_ref, vt_ref, l_ref, l_out, *, panel,
             vtt = vtt.astype(T.dtype)
         acc = jnp.dot(T[:panel, :panel], R, preferred_element_type=acc_t)
         acc += jnp.dot(T[:panel, panel:], vtt, preferred_element_type=acc_t)
-        l_out[...] = acc.astype(l_out.dtype)
+        _store(acc.astype(l_out.dtype))
 
     @pl.when(p == g)
     def _diag():
         # The chain phase already ran the recurrence (in the accumulation
         # dtype); write its result back in the shard's storage dtype.
-        l_out[...] = d_ref[0].astype(l_out.dtype)
+        _store(_blk(d_ref).astype(l_out.dtype))
 
     @pl.when(p > g)
     def _zero():
         # Strictly-lower tiles of the column shard hold zeros by convention.
-        l_out[...] = jnp.zeros_like(l_out)
+        _store(jnp.zeros(_tile(l_ref).shape, l_out.dtype))
 
 
 def panel_apply_sharded(L_loc, T_stack, D_stack, vt_stack, *, tile_off,
@@ -87,42 +112,66 @@ def panel_apply_sharded(L_loc, T_stack, D_stack, vt_stack, *, tile_off,
     """Apply a whole update's panel phase to one column shard, one launch.
 
     Args:
-      L_loc: (n, w_loc) the device's column shard of the ORIGINAL factor.
-      T_stack: (n_panels, P+k, P+k) chain-phase transforms (replicated).
-      D_stack: (n_panels, P, P) chain-phase updated diagonal blocks.
-      vt_stack: (n_panels, k, w_loc) running V^T entering each panel.
+      L_loc: (n, w_loc) the device's column shard of the ORIGINAL factor —
+        or (B, n, w_loc) for a stacked fleet shard, which folds B into the
+        grid of the SAME single launch.
+      T_stack: (n_panels, P+k, P+k) chain-phase transforms (replicated) —
+        (B, n_panels, P+k, P+k) batched.
+      D_stack: (n_panels, P, P) chain-phase updated diagonal blocks —
+        (B, n_panels, P, P) batched.
+      vt_stack: (n_panels, k, w_loc) running V^T entering each panel —
+        (B, n_panels, k, w_loc) batched.
       tile_off: scalar int32 — this device's global tile offset (traced,
-        per-device under shard_map).
+        per-device under shard_map; shared by every fleet member).
       panel: tile size P.
       interpret: Pallas interpret mode.
       accum_dtype: GEMM accumulation dtype (None = fp32) — the precision
         policy's accum, honored here exactly as in the chain phase.
 
     Returns:
-      (n, w_loc) the fully updated column shard.
+      The fully updated column shard, same shape as ``L_loc``.
     """
     global _LAUNCHES_TRACED
-    n, w_loc = L_loc.shape
-    n_panels, pk, _ = T_stack.shape
-    k = vt_stack.shape[1]
+    batched = L_loc.ndim == 3
+    n, w_loc = L_loc.shape[-2], L_loc.shape[-1]
+    n_panels, pk = T_stack.shape[-3], T_stack.shape[-1]
+    k = vt_stack.shape[-2]
     nt_loc = w_loc // panel
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(n_panels, nt_loc),
-        in_specs=[
-            pl.BlockSpec((1, pk, pk), lambda p, t, off: (p, 0, 0)),
-            pl.BlockSpec((1, panel, panel), lambda p, t, off: (p, 0, 0)),
-            pl.BlockSpec((1, k, panel), lambda p, t, off: (p, 0, t)),
-            pl.BlockSpec((panel, panel), lambda p, t, off: (p, t)),
-        ],
-        out_specs=pl.BlockSpec((panel, panel), lambda p, t, off: (p, t)),
-    )
+    if batched:
+        B = L_loc.shape[0]
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, n_panels, nt_loc),
+            in_specs=[
+                pl.BlockSpec((1, 1, pk, pk), lambda b, p, t, off: (b, p, 0, 0)),
+                pl.BlockSpec((1, 1, panel, panel),
+                             lambda b, p, t, off: (b, p, 0, 0)),
+                pl.BlockSpec((1, 1, k, panel), lambda b, p, t, off: (b, p, 0, t)),
+                pl.BlockSpec((1, panel, panel), lambda b, p, t, off: (b, p, t)),
+            ],
+            out_specs=pl.BlockSpec((1, panel, panel),
+                                   lambda b, p, t, off: (b, p, t)),
+        )
+        out_shape = jax.ShapeDtypeStruct((B, n, w_loc), L_loc.dtype)
+    else:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(n_panels, nt_loc),
+            in_specs=[
+                pl.BlockSpec((1, pk, pk), lambda p, t, off: (p, 0, 0)),
+                pl.BlockSpec((1, panel, panel), lambda p, t, off: (p, 0, 0)),
+                pl.BlockSpec((1, k, panel), lambda p, t, off: (p, 0, t)),
+                pl.BlockSpec((panel, panel), lambda p, t, off: (p, t)),
+            ],
+            out_specs=pl.BlockSpec((panel, panel), lambda p, t, off: (p, t)),
+        )
+        out_shape = jax.ShapeDtypeStruct((n, w_loc), L_loc.dtype)
     _LAUNCHES_TRACED += 1
     return pl.pallas_call(
         functools.partial(_panel_kernel, panel=panel,
-                          accum_dtype=accum_dtype),
+                          accum_dtype=accum_dtype, batched=batched),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n, w_loc), L_loc.dtype),
+        out_shape=out_shape,
         interpret=interpret,
     )(jnp.reshape(tile_off, (1,)).astype(jnp.int32),
       T_stack, D_stack, vt_stack, L_loc)
@@ -130,6 +179,9 @@ def panel_apply_sharded(L_loc, T_stack, D_stack, vt_stack, *, tile_off,
 
 def launch_count_sharded(n: int, panel: int, *, strategy: str) -> int:
     """Pallas launches per shard per rank-k update, by sharded strategy.
+
+    Independent of the fleet size: a stacked ``(B, n, n)`` fleet folds B
+    into the grid of the same launches (DESIGN.md §10).
 
     * ``fused`` — 1: the whole panel phase is one kernel (this module).
     * ``gemm``/``paper`` — 0: the per-panel jnp driver issues no kernels

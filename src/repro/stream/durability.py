@@ -5,8 +5,9 @@ Two cooperating pieces make a ``StreamService`` survive a kill:
 * **Checkpoint** — ``checkpoint_service`` writes the fleet through
   ``repro.checkpoint.save`` (atomic, DONE-marker committed) with the
   factor's execution metadata (backend, panel, interpret, precision,
-  dtype) and the service/slot state in the checkpoint's ``extra`` meta —
-  the aux a bare pytree dump loses.
+  dtype, and — for sharded fleets — the mesh axis names/sizes + column
+  axis binding, DESIGN.md §10) and the service/slot state in the
+  checkpoint's ``extra`` meta — the aux a bare pytree dump loses.
 * **Replay log (WAL)** — every state-changing service call appends one
   JSONL record to ``wal_<step>.jsonl``. The log is rotated at checkpoint
   time and *seeded* with the then-unflushed buffer contents and the
@@ -72,6 +73,50 @@ def _precision_from_json(d) -> Optional[Precision]:
     if d is None:
         return None
     return Precision(storage=d["storage"], accum=d["accum"])
+
+
+# -- mesh codec (sharded fleets, DESIGN.md §10) ------------------------------
+#
+# A Mesh is a process-local object (it holds live Devices), so the
+# checkpoint records what DETERMINES it — axis names and per-axis sizes —
+# and restore rebuilds an equivalent mesh on the restoring machine's
+# devices through the one compat choke point. Same-machine restarts get
+# the identical device assignment (bitwise fleets); elastic restores onto
+# a different device count fail loudly in make_mesh_compat rather than
+# silently unsharding.
+
+
+def _mesh_to_json(factor) -> Optional[dict]:
+    if factor.backend != "sharded" or factor.mesh is None:
+        return None
+    mesh = factor.mesh
+    axis = factor.axis
+    return {
+        "axes": [str(a) for a in mesh.axis_names],
+        "shape": [int(mesh.shape[a]) for a in mesh.axis_names],
+        "axis": axis if isinstance(axis, str) else list(axis),
+    }
+
+
+def _mesh_from_json(d, *, mesh=None):
+    """(mesh, axis) from checkpoint meta; ``mesh=`` overrides (elastic)."""
+    if d is None:
+        if mesh is not None:
+            # The caller asked for a sharded placement the checkpoint
+            # cannot satisfy (unsharded or pre-§10 fleet): dropping the
+            # override silently would hand back a replicated store the
+            # caller believes is sharded.
+            raise ValueError(
+                "mesh= override given, but the checkpoint carries no "
+                "sharded-fleet record (unsharded fleet, or saved before "
+                "DESIGN.md §10)")
+        return None, "model"
+    axis = d["axis"] if isinstance(d["axis"], str) else tuple(d["axis"])
+    if mesh is None:
+        from repro.runtime.compat import make_mesh_compat
+
+        mesh = make_mesh_compat(tuple(d["shape"]), tuple(d["axes"]))
+    return mesh, axis
 
 
 # -- the write-ahead log -----------------------------------------------------
@@ -177,6 +222,7 @@ def checkpoint_service(svc: StreamService, ckpt_dir, step: int, *,
         "backend": f.backend,
         "interpret": f.interpret,
         "precision": _precision_to_json(f.precision),
+        "mesh": _mesh_to_json(f),
         "dtype": str(np.dtype(f.dtype)),
         "init_scale": store.init_scale,
         "slots": [[u, s] for u, s in sorted(
@@ -246,8 +292,15 @@ def _apply_record(svc: StreamService, rec: dict) -> None:
         raise ValueError(f"unknown replay record op {op!r}")
 
 
-def restore_service(ckpt_dir, *, step: Optional[int] = None) -> StreamService:
-    """Rebuild a ``StreamService`` from checkpoint + WAL replay."""
+def restore_service(ckpt_dir, *, step: Optional[int] = None,
+                    mesh=None) -> StreamService:
+    """Rebuild a ``StreamService`` from checkpoint + WAL replay.
+
+    ``mesh``: optional mesh override for a sharded fleet — by default the
+    mesh is rebuilt from the checkpoint's recorded axis names/sizes on the
+    restoring machine's devices (``FactorStore.from_state`` then re-pins
+    the sharded placement before any replayed mutation runs).
+    """
     if step is None:
         step = ckpt.latest_step(ckpt_dir)
         if step is None:
@@ -262,10 +315,12 @@ def restore_service(ckpt_dir, *, step: Optional[int] = None) -> StreamService:
     dtype = _np_dtype(s["dtype"])
     template = {"fleet": np.zeros((s["capacity"], s["n"], s["n"]), dtype)}
     data = ckpt.restore(ckpt_dir, step, template)["fleet"]
+    mesh, axis = _mesh_from_json(s.get("mesh"), mesh=mesh)
     factor = CholFactor.from_factor(
         jnp.asarray(data), panel=s["panel"], backend=s["backend"],
         interpret=s["interpret"],
-        precision=_precision_from_json(s["precision"]))
+        precision=_precision_from_json(s["precision"]),
+        mesh=mesh, axis=axis)
     store = FactorStore.from_state(
         factor, width=s["width"],
         slots={_user_key(u): slot for u, slot in s["slots"]},

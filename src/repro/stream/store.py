@@ -19,6 +19,15 @@ constructions per shard; here: batched engine mutations per flush — on the
 fused backend each one is a single device launch for the whole fleet,
 because vmap folds the batch into the kernel grid). Tests assert the
 launch-count story against this counter.
+
+Sharded placement (DESIGN.md §10): constructed with ``backend='sharded'``
+and a ``mesh=``/``axis=`` binding, the fleet's members are each
+column-sharded over the mesh — per-user factors too big for one device —
+and the same donated steps dispatch per-shard through the fleet-native
+distributed driver: one kernel launch per shard per sign block,
+independent of the fleet size (``kernels.sharded.launches_traced`` is the
+counter for that half of the story). admit/grow/evict/compact/decay all
+preserve the placement.
 """
 from __future__ import annotations
 
@@ -71,17 +80,38 @@ def row_dtype_for(factor_dtype) -> np.dtype:
     return np.dtype(np.float32)
 
 
+def _axis_key(axis):
+    """Hashable canonical form of a mesh-axis binding (str/tuple/list) —
+    the SAME normalization the sharded driver applies."""
+    from repro.core.distributed import axis_tuple
+
+    return axis_tuple(axis)
+
+
+def fleet_sharding(mesh, axis):
+    """The fleet placement: batch replicated, columns sharded over ``axis``."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    from repro.core.distributed import axis_tuple
+
+    return NamedSharding(mesh, PartitionSpec(None, None, axis_tuple(axis)))
+
+
 @functools.lru_cache(maxsize=64)
 def _steps_for(panel: int, backend: str, interpret: Optional[bool],
-               precision: Optional[Precision]):
+               precision: Optional[Precision], mesh=None, axis="model"):
     """Donated jitted mutation steps, shared across stores with equal meta.
 
     jit caches key on (closure identity, shapes); caching the closures here
     means two stores with the same execution metadata — or one store timed
     after a warmup store in the benchmark — share compiled executables.
+    ``mesh``/``axis`` ride for sharded placements (jax Meshes hash by axis
+    names + device ids, so equal meshes share one entry): the steps then
+    dispatch per-shard through the fleet-native distributed driver, and
+    donation keeps the sharded fleet in place.
     """
     meta = dict(panel=panel, backend=backend, interpret=interpret,
-                precision=precision)
+                precision=precision, mesh=mesh, axis=axis)
 
     def up_only(data, vup):
         return CholFactor.from_factor(data, **meta).update(vup).data
@@ -121,6 +151,13 @@ class FactorStore:
         (blocks are zero-padded to it, so jit never re-traces on traffic).
       panel / backend / interpret / precision: execution metadata threaded
         onto the fleet's ``CholFactor`` (DESIGN.md §7/§8).
+      mesh / axis: sharded placement (DESIGN.md §10) — with
+        ``backend='sharded'`` every fleet member is column-sharded
+        ``P(None, None, axis)`` over the mesh, the donated jitted steps
+        dispatch per-shard through the fleet-native distributed driver
+        (one kernel launch per shard per sign block, independent of the
+        fleet size), and every membership operation (admit / grow / evict
+        / compact / decay) preserves the placement.
       init_scale: admitted slots start as the factor of ``init_scale * I``
         (the ridge/eps warm start).
       dtype: logical dtype of the fleet (storage dtype under a precision
@@ -130,41 +167,69 @@ class FactorStore:
     def __init__(self, n: int, *, capacity: int = 8, width: int = 16,
                  panel: int = 64, backend: str = "auto",
                  interpret: Optional[bool] = None, precision=None,
+                 mesh=None, axis="model",
                  init_scale: float = 1.0, dtype=jnp.float32):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
+        if backend == "sharded" and mesh is None:
+            raise ValueError("backend='sharded' requires a mesh= placement")
+        if backend != "sharded" and mesh is not None:
+            # The inverse misconfiguration must fail just as loudly:
+            # silently dropping the mesh would leave a fleet sized for
+            # multi-device placement fully replicated on one device.
+            raise ValueError(
+                f"mesh= placement requires backend='sharded' "
+                f"(got backend={backend!r})")
         policy = Precision.parse(precision)
         storage = jnp.dtype(dtype) if policy is None else jnp.dtype(
             policy.storage_for(dtype))
         self.n = n
         self.width = width
         self.init_scale = float(init_scale)
+        self._mesh = mesh if backend == "sharded" else None
+        self._axis = axis
         self._eye = jnp.eye(n, dtype=storage)
         data = jnp.float32(np.sqrt(self.init_scale)) * jnp.broadcast_to(
             self._eye, (capacity, n, n))
         self._factor = CholFactor.from_factor(
-            jnp.asarray(data, storage), panel=panel, backend=backend,
-            interpret=interpret, precision=policy)
+            self._place(jnp.asarray(data, storage)), panel=panel,
+            backend=backend, interpret=interpret, precision=policy,
+            mesh=self._mesh, axis=axis)
         self._slot_of: Dict[object, int] = {}
         self._user_of: Dict[int, object] = {}
         self._free: List[int] = list(range(capacity - 1, -1, -1))
         self._last_used: Dict[object, int] = {}
-        self._steps = _steps_for(panel, backend, interpret, policy)
+        self._steps = _steps_for(panel, backend, interpret, policy,
+                                 self._mesh, _axis_key(axis))
+
+    # -- sharded placement ---------------------------------------------------
+    def _place(self, data):
+        """Pin fleet data to the sharded placement (no-op unsharded)."""
+        if self._mesh is None:
+            return data
+        return jax.device_put(data, fleet_sharding(self._mesh, self._axis))
 
     # -- reconstruction (durability) ----------------------------------------
     @classmethod
     def from_state(cls, factor: CholFactor, *, width: int,
                    slots: Dict[object, int], last_used: Dict[object, int],
                    init_scale: float) -> "FactorStore":
-        """Rebuild a store around restored fleet data + slot table."""
+        """Rebuild a store around restored fleet data + slot table.
+
+        A sharded fleet rides in on the factor's own mesh/axis aux (the
+        durability layer rebuilds the mesh from checkpoint meta before
+        calling this), so the restored store re-pins the placement.
+        """
         if not factor.batched:
             raise ValueError("fleet factor must be batched (B, n, n)")
         self = cls.__new__(cls)
         self.n = factor.n
         self.width = width
         self.init_scale = float(init_scale)
+        self._mesh = factor.mesh if factor.backend == "sharded" else None
+        self._axis = factor.axis
         self._eye = jnp.eye(factor.n, dtype=factor.dtype)
-        self._factor = factor
+        self._factor = factor.replace(data=self._place(factor.data))
         self._slot_of = dict(slots)
         self._user_of = {s: u for u, s in self._slot_of.items()}
         taken = set(self._slot_of.values())
@@ -172,7 +237,8 @@ class FactorStore:
         self._free = [s for s in range(cap - 1, -1, -1) if s not in taken]
         self._last_used = dict(last_used)
         self._steps = _steps_for(factor.panel, factor.backend,
-                                 factor.interpret, factor.precision)
+                                 factor.interpret, factor.precision,
+                                 self._mesh, _axis_key(factor.axis))
         return self
 
     # -- views --------------------------------------------------------------
@@ -252,13 +318,14 @@ class FactorStore:
         return s
 
     def _grow(self) -> None:
-        """Double the batch axis (the one amortised O(B n^2) copy)."""
+        """Double the batch axis (the one amortised O(B n^2) copy);
+        re-pins the sharded placement on the grown fleet."""
         cap = self.capacity
         fresh = jnp.float32(np.sqrt(self.init_scale)) * jnp.broadcast_to(
             self._eye, (cap, self.n, self.n))
         new_data = jnp.concatenate(
             [self._factor.data, jnp.asarray(fresh, self._factor.dtype)])
-        self._factor = self._factor.replace(data=new_data)
+        self._factor = self._factor.replace(data=self._place(new_data))
         self._free.extend(range(2 * cap - 1, cap - 1, -1))
 
     def compact(self, *, min_capacity: int = 1) -> Dict[object, int]:
@@ -273,7 +340,7 @@ class FactorStore:
         new_cap = max(len(keep), min_capacity)
         idx = keep + [0] * (new_cap - len(keep))  # pad slots: reset on admit
         data = self._factor.data[jnp.asarray(idx, jnp.int32)]
-        self._factor = self._factor.replace(data=data)
+        self._factor = self._factor.replace(data=self._place(data))
         self._slot_of = {u: i for i, (u, _) in enumerate(order)}
         self._user_of = {i: u for u, i in self._slot_of.items()}
         self._free = list(range(new_cap - 1, len(keep) - 1, -1))

@@ -1,0 +1,73 @@
+"""Shared fixtures for the tier-1 suite (ISSUE 5 test-harness satellite).
+
+What lives here (vs ``tests/strategies.py``, which holds the data
+generators and hypothesis strategies):
+
+* ``fake_device_kind`` — patch the device kind the backend heuristics
+  see, without real hardware (previously hand-rolled per test file).
+* ``fake_mesh`` — a mesh-shaped duck type with controllable identity, for
+  cache-keying tests where real (interned) Meshes can't produce two
+  distinct-but-equal objects.
+* ``require_devices`` — skip helper for multi-device tests so the
+  conformance matrix runs its sharded column under the CI shard-emulation
+  job (``XLA_FLAGS=--xla_force_host_platform_device_count=4``) and skips
+  cleanly on a single-device run.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def fake_device_kind(monkeypatch):
+    """Make backend heuristics see a chosen device kind.
+
+    Usage::
+
+        def test_...(fake_device_kind):
+            fake_device_kind("tpu")
+            assert backends.resolve("auto", n=64) == "fused"
+
+    Patches ``jax.default_backend`` (the single probe both
+    ``backends.resolve`` and ``backends.default_interpret`` use), scoped
+    to the test by monkeypatch.
+    """
+
+    def _set(kind: str):
+        monkeypatch.setattr(jax, "default_backend", lambda: kind)
+
+    return _set
+
+
+class FakeMesh:
+    """Mesh-shaped duck type (axis_names / shape / devices) with regular
+    object identity — real jax Meshes are interned, so two equal meshes
+    built at different times are the SAME object and can't exercise
+    identity-safe cache keying. Unhashable on purpose: an object-keyed
+    cache would crash instead of silently retaining it."""
+
+    axis_names = ("model",)
+    shape = {"model": 1}
+
+    __hash__ = None
+
+    def __init__(self):
+        self.devices = np.array(jax.devices()[:1])
+
+
+@pytest.fixture
+def fake_mesh():
+    """Factory for distinct-but-equal fake meshes (see ``FakeMesh``)."""
+    return FakeMesh
+
+
+def require_devices(n: int) -> None:
+    """Skip unless the process has >= n devices (shard-emulation jobs set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4``)."""
+    if jax.device_count() < n:
+        pytest.skip(
+            f"needs >= {n} devices (have {jax.device_count()}); run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=4"
+        )

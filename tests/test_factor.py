@@ -20,7 +20,7 @@ from repro.core import (
     chol_update_ref,
     resolve_backend_for,
 )
-from tests.test_core_cholupdate import make_problem, tol_for
+from tests.strategies import make_problem, tol_for
 
 
 # ---------------------------------------------------------------------------
@@ -235,7 +235,7 @@ def test_batched_path_resolves_through_the_same_heuristic(monkeypatch):
     )
 
 
-def test_impl_cache_is_bounded_and_keys_meshes_by_metadata():
+def test_impl_cache_is_bounded_and_keys_meshes_by_metadata(fake_mesh):
     from repro.core import api
 
     api._impl_cache.clear()
@@ -247,17 +247,11 @@ def test_impl_cache_is_bounded_and_keys_meshes_by_metadata():
 
     # Mesh-valued opts key by identity-safe metadata: two equal meshes built
     # at different times share ONE entry (no per-object retention). Real
-    # jax Meshes are interned, so fake the duck type to force distinct
-    # objects with equal metadata — the serving-process leak scenario.
-    class FakeMesh:
-        axis_names = ("model",)
-        shape = {"model": 1}
-        devices = np.array(jax.devices()[:1])
-
-        __hash__ = None  # would crash an object-keyed cache
-
+    # jax Meshes are interned, so the shared FakeMesh duck type (conftest)
+    # forces distinct objects with equal metadata — the serving-process
+    # leak scenario.
     api._impl_cache.clear()
-    mesh_a, mesh_b = FakeMesh(), FakeMesh()
+    mesh_a, mesh_b = fake_mesh(), fake_mesh()
     assert mesh_a is not mesh_b
     impl_a = api._cached_impl("sharded", 16, None, None, {"mesh": mesh_a})
     impl_b = api._cached_impl("sharded", 16, None, None, {"mesh": mesh_b})

@@ -23,7 +23,7 @@ from repro.core import (
 )
 from repro.core import backends
 from repro.kernels import fused as fused_k
-from tests.test_core_cholupdate import make_problem
+from tests.strategies import make_problem
 
 BF16_EPS = 2.0 ** -8  # bfloat16 machine epsilon (8 mantissa bits incl. implicit)
 

@@ -21,13 +21,7 @@ from repro.stream import (
     StreamService,
     mutations_issued,
 )
-from tests.test_core_cholupdate import make_problem, tol_for
-
-
-def _rows(n, m, seed, scale=0.3):
-    rng = np.random.default_rng(seed)
-    return [(scale * rng.normal(size=n)).astype(np.float32)
-            for _ in range(m)]
+from tests.strategies import gauss_rows as _rows, make_problem, spd_stream, tol_for
 
 
 def _seq_apply(L, stream, *, backend="reference", panel=16):
@@ -37,22 +31,6 @@ def _seq_apply(L, stream, *, backend="reference", panel=16):
         col = jnp.asarray(v)[:, None]
         f = f.update(col) if sign == 1 else f.downdate(col)
     return f
-
-
-def _spd_stream(n, n_ops, seed):
-    """Random interleaved stream that stays SPD under sequential
-    application: every downdate removes HALF of a previously-pushed update
-    row, so each sequential prefix is >= the base matrix."""
-    rng = np.random.default_rng(seed)
-    stream, prior_ups = [], []
-    for _ in range(n_ops):
-        v = (0.4 * rng.normal(size=n)).astype(np.float32)
-        stream.append((1, v))
-        prior_ups.append(v)
-        if prior_ups and rng.uniform() < 0.4:
-            j = rng.integers(len(prior_ups))
-            stream.append((-1, (0.5 * prior_ups[j]).astype(np.float32)))
-    return stream
 
 
 # ---------------------------------------------------------------------------
@@ -117,7 +95,7 @@ def test_coalesced_flush_matches_sequential_deterministic():
     n = 16
     L, _ = make_problem(n, 1, seed=3)
     for seed in (0, 1, 2):
-        stream = _spd_stream(n, 6, seed)
+        stream = spd_stream(n, 6, seed)
         f_seq = _seq_apply(L, stream)
         c = Coalescer(n, width=len(stream), capacity=2 * len(stream))
         for sign, v in stream:
@@ -143,7 +121,7 @@ def test_property_sign_schedule_equals_sequential(n, n_ops, seed):
     Soundness: A + sum(u u^T) - sum(d d^T) is order-free and the Cholesky
     factor of an SPD matrix is unique."""
     L, _ = make_problem(n, 1, seed=seed % 1000)
-    stream = _spd_stream(n, n_ops, seed)
+    stream = spd_stream(n, n_ops, seed)
     f_seq = _seq_apply(L, stream)
     c = Coalescer(n, width=len(stream), capacity=2 * len(stream))
     for sign, v in stream:

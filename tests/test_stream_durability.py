@@ -111,6 +111,49 @@ def test_precision_json_roundtrip():
         assert _precision_from_json(_precision_to_json(p)) == p
 
 
+def test_mesh_json_roundtrip_single_device():
+    """The sharded-fleet checkpoint aux (DESIGN.md §10): mesh axis
+    names/sizes + column-axis binding survive the JSON round trip, and
+    restore rebuilds an equivalent mesh. Single-device twin of the
+    bitwise restart test in tests/test_distributed.py."""
+    import jax
+
+    from repro.core import CholFactor
+    from repro.runtime.compat import make_mesh_compat
+    from repro.stream.durability import _mesh_from_json, _mesh_to_json
+
+    # Unsharded factors carry no mesh record.
+    plain = CholFactor.identity(4, backend="gemm")
+    assert _mesh_to_json(plain) is None
+    assert _mesh_from_json(None) == (None, "model")
+    # ...and a mesh override against a mesh-less record must fail loudly,
+    # not hand back a replicated store the caller believes is sharded.
+    with pytest.raises(ValueError):
+        _mesh_from_json(None, mesh=object())
+    # A mesh on a non-sharded store is equally loud (the inverse of the
+    # sharded-without-mesh error).
+    from repro.stream import FactorStore
+
+    with pytest.raises(ValueError):
+        FactorStore(4, capacity=1, backend="gemm", mesh=object())
+
+    mesh = make_mesh_compat((1,), ("model",), devices=jax.devices()[:1])
+    f = CholFactor.identity(4, backend="sharded", mesh=mesh, axis="model")
+    rec = _mesh_to_json(f)
+    assert rec == {"axes": ["model"], "shape": [1], "axis": "model"}
+    mesh2, axis2 = _mesh_from_json(rec)
+    assert axis2 == "model"
+    assert tuple(mesh2.axis_names) == ("model",)
+    assert mesh2.shape["model"] == 1
+    # A caller-supplied mesh (elastic restore) wins over the rebuild.
+    mesh3, _ = _mesh_from_json(rec, mesh=mesh)
+    assert mesh3 is mesh
+    # Tuple axis bindings round-trip as tuples (JSON stores a list).
+    rec2 = dict(rec, axis=["data", "model"])
+    _, axis3 = _mesh_from_json(rec2)
+    assert axis3 == ("data", "model")
+
+
 # ---------------------------------------------------------------------------
 # Acceptance: kill-and-restart mid-buffer
 # ---------------------------------------------------------------------------
