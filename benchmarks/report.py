@@ -84,12 +84,30 @@ def parse_derived(derived):
     return out
 
 
+def row_mode(row, rec):
+    """'compiled' or '⚠ interpret' for a snapshot row.
+
+    New rows record ``interpret=0|1`` in their derived fields; older
+    records predate the tag, so fall back to the snapshot's backend —
+    off-TPU/GPU runs execute the Pallas kernels in interpret mode, whose
+    wall-clock is dispatch-bound Python. Without the tag a row like
+    bf16-slower-than-fp32 reads as a real hardware measurement; it is
+    not, and the tables must say so.
+    """
+    d = parse_derived(row.get("derived", ""))
+    if "interpret" in d:
+        interp = d["interpret"] == "1"
+    else:
+        interp = rec.get("backend") not in ("tpu", "gpu")
+    return "⚠ interpret" if interp else "compiled"
+
+
 def precision_table(rec):
     """The --dtype axis PR 3 added: per-storage-dtype rows of the
     cholupdate suite (previously ignored by this report)."""
     lines = [
-        "| backend | dtype | us/update | err | bytes/update |",
-        "|---|---|---|---|---|",
+        "| backend | dtype | us/update | err | bytes/update | mode |",
+        "|---|---|---|---|---|---|",
     ]
     found = False
     for row in rec.get("rows", []):
@@ -100,46 +118,56 @@ def precision_table(rec):
         d = parse_derived(row["derived"])
         lines.append(
             f"| {parts[2]} | {parts[3]} | {row['us']:.1f} "
-            f"| {d.get('err', '—')} | {d.get('bytes_per_update', '—')} |"
+            f"| {d.get('err', '—')} | {d.get('bytes_per_update', '—')} "
+            f"| {row_mode(row, rec)} |"
         )
-    return "\n".join(lines) if found else None
+    if not found:
+        return None
+    return "\n".join(lines + ["", _interpret_note(rec)])
+
+
+def _interpret_note(rec):
+    return ("⚠ interpret rows run the kernels in Pallas interpret mode "
+            "(dispatch-bound Python) — bandwidth/bytes columns are real, "
+            "wall-clock is NOT a hardware measurement.")
 
 
 def stream_table(rec):
-    """BENCH_stream.json rows: the coalesce-width sweep + derived gains."""
+    """BENCH_stream.json rows: the coalesce-width sweep + derived gains
+    + the stream/latency section (first-flush vs steady-state)."""
     lines = [
-        "| row | us/row | updates/s | bytes/row | mutations |",
-        "|---|---|---|---|---|",
+        "| row | us/row | updates/s | bytes/row | mutations | mode |",
+        "|---|---|---|---|---|---|",
     ]
     extras = []
     for row in rec.get("rows", []):
         d = parse_derived(row["derived"])
-        if "speedup" in d:
+        if "speedup" in d or row["name"].startswith("stream/latency/"):
             extras.append(f"**{row['name']}**: {row['derived']}")
             continue
         lines.append(
             f"| {row['name']} | {row['us']:.1f} "
             f"| {d.get('updates_per_s', '—')} | {d.get('bytes_per_row', '—')} "
-            f"| {d.get('mutations', '—')} |"
+            f"| {d.get('mutations', '—')} | {row_mode(row, rec)} |"
         )
-    return "\n".join(lines + [""] + extras)
+    return "\n".join(lines + ["", _interpret_note(rec), ""] + extras)
 
 
 def distributed_table(rec):
     """BENCH_distributed.json rows: device scaling + the fleet axis
     (launches per shard vs fleet size, DESIGN.md §10)."""
     lines = [
-        "| row | us | err | launches/shard | expected |",
-        "|---|---|---|---|---|",
+        "| row | us | err | launches/shard | expected | mode |",
+        "|---|---|---|---|---|---|",
     ]
     for row in rec.get("rows", []):
         d = parse_derived(row["derived"])
         lines.append(
             f"| {row['name']} | {row['us']:.1f} | {d.get('err', '—')} "
             f"| {d.get('launches_per_shard', '—')} "
-            f"| {d.get('expected', '—')} |"
+            f"| {d.get('expected', '—')} | {row_mode(row, rec)} |"
         )
-    return "\n".join(lines)
+    return "\n".join(lines + ["", _interpret_note(rec)])
 
 
 def snapshot_sections():

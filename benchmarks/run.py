@@ -6,12 +6,16 @@ Roofline tables (deliverable g) are produced by repro.launch.dryrun and
 summarised from benchmarks/results/*.jsonl by benchmarks/report.py.
 """
 import argparse
+import inspect
 import sys
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-smoke sizes; suites that support it (stream) "
+                         "run only their latency section")
     ap.add_argument("--only", type=str, default=None,
                     help="comma-separated subset: cholupdate,kernels,"
                          "distributed,optimizer,stream")
@@ -35,7 +39,11 @@ def main() -> None:
     chosen = args.only.split(",") if args.only else list(suites)
     rows = []
     for name in chosen:
-        suites[name](rows, quick=args.quick)
+        fn = suites[name]
+        kw = {"quick": args.quick or args.tiny}
+        if args.tiny and "tiny" in inspect.signature(fn).parameters:
+            kw["tiny"] = True
+        fn(rows, **kw)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

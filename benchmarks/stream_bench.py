@@ -22,6 +22,20 @@ fused batched rank-k mutations. Sweeping the coalesce width 1 -> 32 shows
 The ``dtypes`` axis records the bf16-storage bytes/row halving at the
 paper's k=16 sweet spot (DESIGN.md §8). Rows land in
 ``benchmarks/results/BENCH_stream.json`` via ``scripts/bench.sh``.
+
+The **latency section** (``stream/latency/*``, DESIGN.md §11) measures
+what the AOT warmup layer buys: first-flush latency on a cold store
+(tracing + XLA compile on the serving path) vs on a ``warmup()``-ed
+store (pre-compiled executable dispatch), plus steady-state flush
+p50/p99. The trace-stall delta is the paper-scale argument for the
+bucket ladder — a multi-millisecond compile against a sub-millisecond
+flush. ``tiny=True`` (CI smoke, ``benchmarks.run --tiny``) runs ONLY
+this section at minimal sizes.
+
+Every derived field carries ``interpret=0|1``: off-TPU rows run the
+fused kernels in Pallas interpret mode, whose wall-clock is
+dispatch-bound Python, not kernel performance — the report renderer
+tags such rows so they are not misread as hardware measurements.
 """
 from __future__ import annotations
 
@@ -59,7 +73,75 @@ def _drive(*, B, n, R, width, panel, interpret, precision=None, seed=0):
     return time.perf_counter() - t0, store_mod.mutations_issued() - m0
 
 
-def run(csv_rows, *, quick=False, dtypes=("float32",)):
+def _percentile(xs, q) -> float:
+    return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+def latency(csv_rows, *, quick=False, tiny=False):
+    """First-flush vs steady-state flush latency (cold / warm / p50 / p99).
+
+    Each drive starts from a CLEARED step cache (``_steps_for``), so the
+    cold drive pays tracing + compilation inside its first flush exactly
+    like a fresh serving process would, and the warm drive pays it inside
+    ``warmup()`` instead — the flush loop then only dispatches.
+    """
+    interpret = jax.default_backend() != "tpu"
+    if tiny:
+        B, n, width, panel, flushes = 2, 16, 4, 8, 5
+    elif quick:
+        B, n, width, panel, flushes = 4, 64, 8, 32, 20
+    else:
+        B, n, width, panel, flushes = 8, 128, 16, 32, 50
+    rng = np.random.default_rng(7)
+    rows = (0.1 * rng.normal(size=((flushes + 1) * width, B, n))
+            ).astype(np.float32)
+
+    def drive(warm):
+        store_mod._steps_for.cache_clear()   # fresh-process simulation
+        store = FactorStore(n, capacity=B, width=width, panel=panel,
+                            backend="fused", interpret=interpret)
+        svc = StreamService(store, auto_flush=False)
+        if warm:
+            store.warmup(rungs=(store.capacity,))
+        traces0 = store_mod.traces_counted()
+        for u in range(B):
+            svc.admit(u)
+        lat = []
+        for f in range(flushes + 1):
+            for j in range(width):
+                for u in range(B):
+                    svc.push(u, rows[f * width + j, u])
+            t0 = time.perf_counter()
+            svc.flush(force=True)
+            jax.block_until_ready(store.factor.data)
+            lat.append((time.perf_counter() - t0) * 1e6)
+        return lat, store_mod.traces_counted() - traces0
+
+    cold, cold_traces = drive(warm=False)
+    warm, warm_traces = drive(warm=True)
+    steady = warm[1:]
+    p50, p99 = _percentile(steady, 50), _percentile(steady, 99)
+    csv_rows.append(
+        (f"stream/latency/first_flush/B{B}n{n}w{width}", warm[0],
+         f"cold_first_us={cold[0]:.1f} warm_first_us={warm[0]:.1f} "
+         f"trace_stall_us={cold[0] - warm[0]:.1f} "
+         f"traces_cold={cold_traces} traces_warm={warm_traces} "
+         f"interpret={int(interpret)}")
+    )
+    csv_rows.append(
+        (f"stream/latency/steady/B{B}n{n}w{width}", p50,
+         f"steady_p50_us={p50:.1f} steady_p99_us={p99:.1f} "
+         f"warm_first_over_p50={warm[0] / p50:.2f} "
+         f"steady_within_2x_first={int(p50 <= 2 * warm[0])} "
+         f"interpret={int(interpret)}")
+    )
+    return csv_rows
+
+
+def run(csv_rows, *, quick=False, dtypes=("float32",), tiny=False):
+    if tiny:
+        # CI smoke: the latency section alone at minimal sizes.
+        return latency(csv_rows, tiny=True)
     interpret = jax.default_backend() != "tpu"
     B, n, R, panel = (4, 64, 32, 32) if quick else (8, 128, 64, 32)
     widths = (1, 2, 4, 8, 16, 32)
@@ -80,14 +162,15 @@ def run(csv_rows, *, quick=False, dtypes=("float32",)):
         csv_rows.append(
             (f"stream/width{width}/B{B}n{n}", dt / rows_total * 1e6,
              f"updates_per_s={ups[width]:.0f} bytes_per_row={bytes_row} "
-             f"mutations={muts}")
+             f"mutations={muts} interpret={int(interpret)}")
         )
 
     # The acceptance headline: coalesced k=16 vs k=1 sequential absorption.
     csv_rows.append(
         (f"stream/coalesce_gain_k16_vs_k1/B{B}n{n}", 0.0,
          f"speedup={ups[16] / ups[1]:.2f}x "
-         f"updates_per_s_k16={ups[16]:.0f} updates_per_s_k1={ups[1]:.0f}")
+         f"updates_per_s_k16={ups[16]:.0f} updates_per_s_k1={ups[1]:.0f} "
+         f"interpret={int(interpret)}")
     )
 
     # Storage-dtype axis at the paper's sweet spot: bytes/row is the
@@ -106,6 +189,8 @@ def run(csv_rows, *, quick=False, dtypes=("float32",)):
             n, panel, 16, storage_dtype=storage) // 16
         csv_rows.append(
             (f"stream/precision/{dtype}/B{B}n{n}k16", dt / (B * 16) * 1e6,
-             f"bytes_per_row={bytes_row} mutations={muts}")
+             f"bytes_per_row={bytes_row} mutations={muts} "
+             f"interpret={int(interpret)}")
         )
-    return csv_rows
+
+    return latency(csv_rows, quick=quick)

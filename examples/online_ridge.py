@@ -111,6 +111,11 @@ def run_batched(*, users=4, d=64, batch=8, window_batches=4, steps=8,
         store = FactorStore(d, capacity=users, width=width, panel=panel,
                             backend="fused", init_scale=lam)
     svc = StreamService(store, window=window_batches, auto_flush=False)
+    # AOT-warm the serving rung (DESIGN.md §11): the step loop below only
+    # dispatches pre-compiled executables — no first-flush trace stall.
+    rep = store.warmup(rungs=(store.capacity,))
+    print(f"warmup: {rep.compiled} AOT executables in {rep.seconds:.1f}s "
+          f"({rep.cached} already cached)")
     for u in range(users):
         svc.admit(u)
 

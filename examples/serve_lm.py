@@ -43,7 +43,7 @@ SHARDS = 4
 
 
 def personalize(token_stream, *, d_feat=32, width=8, window=16, lam=1e-1,
-                panel=16, seed=0, sharded=False):
+                panel=16, seed=0, sharded=False, background=False):
     """Per-user online ridge over the generated tokens, one streamed fleet.
 
     token_stream: (B, T) generated token ids. Returns (max tracking error
@@ -51,6 +51,9 @@ def personalize(token_stream, *, d_feat=32, width=8, window=16, lam=1e-1,
     boundary, batched mutations issued, rank-1 rows absorbed). With
     ``sharded=True`` the fleet members are column-sharded over a
     ``SHARDS``-way mesh and flushes dispatch per-shard (DESIGN.md §10).
+    With ``background=True`` the flushes run on the service's daemon
+    worker (DESIGN.md §11) — pushes return immediately, reports are
+    collected via ``drain()`` at each evaluation boundary.
     """
     B, T = token_stream.shape
     rng = np.random.default_rng(seed)
@@ -73,7 +76,12 @@ def personalize(token_stream, *, d_feat=32, width=8, window=16, lam=1e-1,
     else:
         store = FactorStore(d_feat, capacity=B, width=width, panel=panel,
                             backend="fused", init_scale=lam)
-    svc = StreamService(store, window=window, auto_flush=False)
+    svc = StreamService(store, window=window, auto_flush=background,
+                        background=background)
+    # AOT-warm the serving rung before any traffic: everything the loop
+    # below dispatches is then a pre-compiled executable (DESIGN.md §11),
+    # so the first flush costs the same as the thousandth.
+    store.warmup(rungs=(store.capacity,))
     for u in range(B):
         svc.admit(u)
 
@@ -108,6 +116,11 @@ def personalize(token_stream, *, d_feat=32, width=8, window=16, lam=1e-1,
             pending[u].append((phi[u].copy(), float(reward[u])))
             rows_pushed += 1
         if (t + 1) % width == 0:
+            if background:
+                # The worker flushed width-triggered rings off-thread;
+                # collect its reports, then sweep any ready remainder.
+                for rep in svc.drain():
+                    absorb(rep)
             absorb(svc.flush())
             # Maintained vs exact windowed solve over the absorbed rows.
             w = store.factor.solve(jnp.asarray(xty))        # (B, d) prefs
@@ -118,10 +131,14 @@ def personalize(token_stream, *, d_feat=32, width=8, window=16, lam=1e-1,
                 w_exact = np.linalg.solve(A, Phi.T @ R)
                 max_err = max(max_err, float(
                     np.max(np.abs(np.asarray(w[u]) - w_exact))))
+    if background:
+        for rep in svc.drain():
+            absorb(rep)
+        svc.stop_background()
     return max_err, mutations_issued() - muts0, rows_pushed
 
 
-def main(*, sharded=False):
+def main(*, sharded=False, background=False):
     cfg = get_config("h2o-danube-1.8b").reduced()
     key = jax.random.PRNGKey(0)
     values, _ = split_params(init_model(key, cfg))
@@ -133,9 +150,10 @@ def main(*, sharded=False):
     print(f"generated {toks.shape} tokens at {tps:.1f} tok/s (batch {batch})")
 
     err, muts, rows = personalize(np.asarray(toks[:, prompt_len:]),
-                                  sharded=sharded)
+                                  sharded=sharded, background=background)
     print(f"personalization sidecar: fleet of {batch} per-user factors"
-          f"{f' ({SHARDS}-way sharded members)' if sharded else ''}, "
+          f"{f' ({SHARDS}-way sharded members)' if sharded else ''}"
+          f"{' (background flush worker)' if background else ''}, "
           f"{rows} rank-1 rows coalesced into {muts} batched rank-k "
           f"mutations ({rows / max(muts, 1):.1f} rows/mutation), "
           f"max err vs exact windowed solve = {err:.3e}")
@@ -150,7 +168,10 @@ if __name__ == "__main__":
     ap.add_argument("--sharded", action="store_true",
                     help="column-shard the sidecar fleet's members over a "
                          f"{SHARDS}-way mesh (emulated if needed)")
+    ap.add_argument("--background", action="store_true",
+                    help="run sidecar flushes on the service's daemon "
+                         "worker (DESIGN.md §11) instead of inline")
     args = ap.parse_args()
     if args.sharded:
         ensure_host_devices(SHARDS)
-    main(sharded=args.sharded)
+    main(sharded=args.sharded, background=args.background)

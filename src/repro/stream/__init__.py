@@ -1,13 +1,17 @@
 """``repro.stream``: streaming update service over a managed factor fleet.
 
 The layer between the ``CholFactor`` engine and a serving system
-(DESIGN.md §9): ``Coalescer`` buffers per-user rank-1 traffic in ring
-buffers and drains it as sign-scheduled rank-k blocks (paper sweet spot
-k=16); ``FactorStore`` manages the batched fleet those blocks mutate
-through one donated-buffer jitted step; ``StreamService`` ties them
-together with window forgetting, deadline flushes and decay;
-``durability`` makes the whole thing survive a kill via checkpoint +
-replay-log restore.
+(DESIGN.md §9/§11): ``Coalescer`` buffers per-user rank-1 traffic in
+ring buffers and drains it as sign-scheduled rank-k blocks (paper sweet
+spot k=16); ``FactorStore`` manages the batched fleet those blocks
+mutate through donated AOT-compiled steps over a fixed capacity
+**bucket ladder** with an explicit slot map; ``warmup`` pre-compiles
+every ladder rung's executables so steady-state serving never traces
+(``assert_no_retrace`` is the enforcement hook); ``StreamService`` ties
+them together with window forgetting, deadline flushes, decay and an
+optional background flush worker; ``durability`` makes the whole thing
+survive a kill via checkpoint + replay-log restore (ladder config and
+slot map ride in the checkpoint meta, so a restart restores warm).
 """
 from repro.stream.coalescer import Coalescer, DrainResult, RingBuffer
 from repro.stream.durability import (
@@ -18,13 +22,31 @@ from repro.stream.durability import (
     restore_service,
 )
 from repro.stream.service import FlushReport, StreamService
-from repro.stream.store import FactorStore, mutations_issued
+from repro.stream.store import (
+    DEFAULT_LADDER,
+    FactorStore,
+    LadderFullError,
+    ladder_from,
+    mutations_issued,
+    traces_counted,
+)
+from repro.stream.warmup import (
+    RetraceError,
+    WarmupReport,
+    assert_no_retrace,
+    warmup_service,
+    warmup_store,
+    watch_traces,
+)
 
 __all__ = [
     "Coalescer",
     "DrainResult",
     "RingBuffer",
+    "DEFAULT_LADDER",
     "FactorStore",
+    "LadderFullError",
+    "ladder_from",
     "FlushReport",
     "StreamService",
     "ReplayLog",
@@ -33,4 +55,11 @@ __all__ = [
     "encode_row",
     "decode_row",
     "mutations_issued",
+    "traces_counted",
+    "RetraceError",
+    "WarmupReport",
+    "assert_no_retrace",
+    "warmup_service",
+    "warmup_store",
+    "watch_traces",
 ]

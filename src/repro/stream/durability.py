@@ -217,7 +217,9 @@ def checkpoint_service(svc: StreamService, ckpt_dir, step: int, *,
     extra = {"stream": {
         "n": store.n,
         "width": store.width,
+        "widths": list(store.widths),
         "capacity": store.capacity,
+        "ladder": list(store.ladder),
         "panel": f.panel,
         "backend": f.backend,
         "interpret": f.interpret,
@@ -227,12 +229,14 @@ def checkpoint_service(svc: StreamService, ckpt_dir, step: int, *,
         "init_scale": store.init_scale,
         "slots": [[u, s] for u, s in sorted(
             store._slot_of.items(), key=lambda kv: kv[1])],
+        "empty_slots": list(store.empty_slots),
         "last_used": [[u, t] for u, t in store._last_used.items()],
         "tick": svc.tick_count,
         "window": svc.window,
         "deadline": svc.deadline,
         "auto_flush": svc.auto_flush,
         "ring_capacity": svc._ring_capacity,
+        "background": svc.background_active,
         "wal": wal_path.name,
     }}
     path = ckpt.save(ckpt_dir, step, {"fleet": f.data}, keep=keep,
@@ -293,13 +297,21 @@ def _apply_record(svc: StreamService, rec: dict) -> None:
 
 
 def restore_service(ckpt_dir, *, step: Optional[int] = None,
-                    mesh=None) -> StreamService:
+                    mesh=None, warm: bool = False) -> StreamService:
     """Rebuild a ``StreamService`` from checkpoint + WAL replay.
 
     ``mesh``: optional mesh override for a sharded fleet — by default the
     mesh is rebuilt from the checkpoint's recorded axis names/sizes on the
     restoring machine's devices (``FactorStore.from_state`` then re-pins
     the sharded placement before any replayed mutation runs).
+
+    ``warm``: run ``store.warmup()`` (the checkpointed ladder config
+    makes every reachable shape enumerable) BEFORE the WAL replay, so
+    the replayed mutation sequence — and everything the restored service
+    serves afterwards — dispatches pre-compiled executables: restart
+    restores a warm store bitwise and replays without re-tracing. In a
+    surviving process the executable cache is metadata-shared, so a warm
+    restore after warmed serving compiles nothing.
     """
     if step is None:
         step = ckpt.latest_step(ckpt_dir)
@@ -325,7 +337,14 @@ def restore_service(ckpt_dir, *, step: Optional[int] = None,
         factor, width=s["width"],
         slots={_user_key(u): slot for u, slot in s["slots"]},
         last_used={_user_key(u): t for u, t in s["last_used"]},
-        init_scale=s["init_scale"])
+        init_scale=s["init_scale"],
+        # Pre-ladder checkpoints carry no ladder/widths records:
+        # from_state then derives the doubling ladder from the restored
+        # capacity (the historical grow schedule) and default buckets.
+        ladder=tuple(s["ladder"]) if s.get("ladder") else None,
+        widths=tuple(s["widths"]) if s.get("widths") else None)
+    if warm:
+        store.warmup()
     svc = StreamService(store, window=s["window"], deadline=s["deadline"],
                         auto_flush=s["auto_flush"],
                         capacity=s["ring_capacity"])
@@ -345,6 +364,10 @@ def restore_service(ckpt_dir, *, step: Optional[int] = None,
     finally:
         svc._replaying = False
     svc.attach_wal(ReplayLog(wal_path))  # append-continue the same segment
+    if s.get("background"):
+        # Replay is strictly synchronous (the log's flush grouping is
+        # authoritative); only the LIVE service gets its worker back.
+        svc.start_background()
     return svc
 
 

@@ -16,18 +16,35 @@ fused rank-k flushes:
 * ``flush(force=...)`` drains every selected user and issues at most ONE
   batched rank-k mutation per sign block per round (updates first, then
   guarded downdates — the coalescer's sign schedule), zero-padding
-  non-flushing slots so the jitted donated step never re-traces.
+  non-flushing slots so the pre-compiled donated step never re-traces.
 * ``decay(alpha)`` is exact exponential forgetting for the whole fleet.
+
+**Background flushing** (``start_background()``): a bounded-queue daemon
+worker (MaxText ``JetThread``-style) runs the flushes instead of the
+caller. ``push``/``tick`` then only enqueue a flush *request* — the
+producer returns immediately while the worker drains rings, builds
+blocks and dispatches the donated steps, so host-side coalescing
+overlaps device mutations. Requests are coalesced (a pending request
+absorbs later triggers) and the queue is bounded, so a producer that
+outruns the device blocks on ``put`` — backpressure, not unbounded
+buffering. ``tick()``/``flush()`` stay the synchronous fallback: with no
+worker running, behaviour is exactly the pre-worker serving loop. All
+state-changing entry points share one lock, so either mode (or both
+interleaved) is safe.
 
 Every state-changing call appends one record to the attached write-ahead
 ``ReplayLog`` (``repro.stream.durability``); checkpoint + log replay
 reproduce the exact post-flush state after a crash, because flush events
-are logged and replay re-issues the identical mutation sequence.
+are logged and replay re-issues the identical mutation sequence
+(background flushes log identically — the record is written by whichever
+thread runs the flush, under the lock).
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
+import queue
+import threading
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -52,7 +69,7 @@ class FlushReport:
       mutations: batched rank-k mutations dispatched (one per sign block
         per round; 1–2 in the steady state).
       rounds: drain/apply rounds (1 unless a ring held > width rows).
-      reason: 'width' | 'deadline' | 'manual' | 'force'.
+      reason: 'width' | 'deadline' | 'manual' | 'force' | 'background'.
     """
 
     absorbed: Dict[object, int] = dataclasses.field(default_factory=dict)
@@ -67,6 +84,43 @@ class FlushReport:
         return not self.absorbed and not self.downdated
 
 
+class _FlushWorker(threading.Thread):
+    """Daemon flush worker (the MaxText ``JetThread`` shape): consumes
+    coalesced flush requests from a bounded queue and runs them under the
+    service lock. An exception is captured, not swallowed — it re-raises
+    at the next ``drain()``/``stop_background()`` (and the worker stops
+    accepting work), so a poisoned flush cannot silently drop traffic."""
+
+    _STOP = object()
+
+    def __init__(self, svc: "StreamService", maxsize: int):
+        super().__init__(daemon=True, name="stream-flush-worker")
+        self._svc = svc
+        self.requests: "queue.Queue" = queue.Queue(maxsize=maxsize)
+        self.exception: Optional[BaseException] = None
+
+    def run(self) -> None:
+        while True:
+            req = self.requests.get()
+            try:
+                if req is self._STOP:
+                    return
+                if self.exception is None:
+                    force, reason = req
+                    self._svc._flush_sync(force=force, reason=reason)
+            except BaseException as e:  # noqa: BLE001 — reported at drain
+                self.exception = e
+            finally:
+                self.requests.task_done()
+
+    def submit(self, force: bool, reason: str) -> None:
+        self.requests.put((force, reason))
+
+    def stop(self) -> None:
+        self.requests.put(self._STOP)
+        self.join()
+
+
 class StreamService:
     """Coalescing streaming-update service over a ``FactorStore`` fleet.
 
@@ -79,16 +133,22 @@ class StreamService:
         force a flush at the next ``tick()`` (None: width/manual only).
       auto_flush: flush automatically when a push fills a user's ring.
       capacity: per-sign ring capacity per user (default ``2 * width``).
+      background: start the background flush worker immediately (same as
+        calling ``start_background()`` after construction).
+      queue_size: bound on coalesced pending flush requests (producers
+        block when it is full — backpressure).
     """
 
     def __init__(self, store: FactorStore, *, window: Optional[int] = None,
                  deadline: Optional[int] = None, auto_flush: bool = True,
-                 capacity: Optional[int] = None):
+                 capacity: Optional[int] = None, background: bool = False,
+                 queue_size: int = 64):
         self.store = store
         self.window = window
         self.deadline = deadline
         self.auto_flush = auto_flush
         self._ring_capacity = capacity
+        self._queue_size = queue_size
         self.tick_count = 0
         self._coalescers: Dict[object, Coalescer] = {}
         # (due_tick, insertion_order, user, row) — heap by due tick.
@@ -96,6 +156,62 @@ class StreamService:
         self._sched_seq = 0
         self._wal = None          # durability.ReplayLog or None
         self._replaying = False   # replay applies logged flushes verbatim
+        # One lock for every state-changing entry point: the background
+        # worker and the producer thread interleave at call granularity.
+        self._lock = threading.RLock()
+        self._worker: Optional[_FlushWorker] = None
+        self._bg_reports: List[FlushReport] = []
+        if background:
+            self.start_background()
+
+    # -- background worker ---------------------------------------------------
+    @property
+    def background_active(self) -> bool:
+        return self._worker is not None and self._worker.is_alive()
+
+    def start_background(self) -> None:
+        """Start the daemon flush worker (idempotent). From here on,
+        flush triggers from ``push``/``tick`` are enqueued and executed
+        off-thread; explicit ``flush()`` calls remain synchronous."""
+        if self.background_active:
+            return
+        self._worker = _FlushWorker(self, self._queue_size)
+        self._worker.start()
+
+    def stop_background(self) -> None:
+        """Stop the worker after it drains its queue; re-raises any
+        exception the worker captured. Pending ring contents stay
+        buffered — they flush on the next trigger or ``flush(force=)``."""
+        if self._worker is None:
+            return
+        self._worker.stop()
+        exc, self._worker = self._worker.exception, None
+        if exc is not None:
+            raise exc
+
+    def drain(self) -> Tuple[FlushReport, ...]:
+        """Block until every enqueued background flush has run; returns
+        (and clears) their reports. Re-raises a captured worker
+        exception. No-op (empty tuple) without a worker."""
+        if self._worker is None:
+            return ()
+        self._worker.requests.join()
+        if self._worker.exception is not None:
+            exc, self._worker.exception = self._worker.exception, None
+            raise exc
+        with self._lock:
+            reports, self._bg_reports = tuple(self._bg_reports), []
+        return reports
+
+    def _trigger_flush(self, *, force: bool, reason: str
+                       ) -> Optional[FlushReport]:
+        """Route a flush trigger: enqueue to the worker (coalescing with
+        an already-pending request) or run synchronously."""
+        if self.background_active:
+            if self._worker.requests.empty():
+                self._worker.submit(force, reason)
+            return None
+        return self._flush_sync(force=force, reason=reason)
 
     # -- durability plumbing ------------------------------------------------
     def attach_wal(self, wal) -> None:
@@ -115,54 +231,63 @@ class StreamService:
 
     def admit(self, user, *, scale: Optional[float] = None) -> int:
         """Admit ``user`` into the fleet (idempotent)."""
-        # Key on SERVICE membership, not store membership: a user admitted
-        # directly on the FactorStore still needs its coalescer here.
-        known = user in self._coalescers
-        slot = self.store.admit(user, scale=scale, tick=self.tick_count)
-        if not known:
-            self._coalescers[user] = Coalescer(
-                self.store.n, width=self.store.width,
-                capacity=self._ring_capacity, deadline=self.deadline,
-                dtype=self.store.row_dtype)
-            self._log({"op": "admit", "user": user, "scale": scale})
-        return slot
+        with self._lock:
+            # Key on SERVICE membership, not store membership: a user
+            # admitted directly on the FactorStore still needs its
+            # coalescer here.
+            known = user in self._coalescers
+            slot = self.store.admit(user, scale=scale, tick=self.tick_count)
+            if not known:
+                self._coalescers[user] = Coalescer(
+                    self.store.n, width=self.store.width,
+                    capacity=self._ring_capacity, deadline=self.deadline,
+                    dtype=self.store.row_dtype)
+                self._log({"op": "admit", "user": user, "scale": scale})
+            return slot
 
     def evict(self, user) -> None:
         """Remove a user: pending buffer rows and scheduled downdates are
         DROPPED (the slot's statistics go with it — there is nothing left
         to keep consistent)."""
-        self.store.evict(user)
-        del self._coalescers[user]
-        self._schedule = [e for e in self._schedule if e[2] != user]
-        heapq.heapify(self._schedule)
-        self._log({"op": "evict", "user": user})
+        with self._lock:
+            self.store.evict(user)
+            del self._coalescers[user]
+            self._schedule = [e for e in self._schedule if e[2] != user]
+            heapq.heapify(self._schedule)
+            self._log({"op": "evict", "user": user})
 
     def evict_idle(self, *, max_idle: int) -> tuple:
-        stale = tuple(u for u in self.store.users()
-                      if self.tick_count - self.store.last_used(u) > max_idle)
-        for u in stale:
-            self.evict(u)
-        return stale
+        with self._lock:
+            stale = tuple(
+                u for u in self.store.users()
+                if self.tick_count - self.store.last_used(u) > max_idle)
+            for u in stale:
+                self.evict(u)
+            return stale
 
     # -- traffic ------------------------------------------------------------
     def push(self, user, v, *, sign: int = 1) -> Optional[FlushReport]:
-        """Buffer one rank-1 observation; may auto-flush (report returned).
+        """Buffer one rank-1 observation; may auto-flush (report returned
+        when the flush ran synchronously; a background worker returns the
+        report via ``drain()`` instead).
 
         ``sign=+1`` is ``push_update``, ``-1`` ``push_downdate`` — the
         deferred mutation lands at the next flush, coalesced into that
         sign's rank-k block.
         """
-        self.admit(user)
-        v = np.asarray(v, self.store.row_dtype).reshape(-1)
-        # Buffer BEFORE logging: a push that raises (full ring, wrong dim)
-        # is survivable live, so it must not leave a poison record that
-        # would re-raise inside every future replay.
-        self._coalescers[user].push(v, sign=sign, tick=self.tick_count)
-        self._log({"op": "push", "user": user, "sign": sign,
-                   **_encode_row(v)})
-        if (self.auto_flush and not self._replaying
-                and self._coalescers[user].ready()):
-            return self.flush(reason="width")
+        with self._lock:
+            self.admit(user)
+            v = np.asarray(v, self.store.row_dtype).reshape(-1)
+            # Buffer BEFORE logging: a push that raises (full ring, wrong
+            # dim) is survivable live, so it must not leave a poison
+            # record that would re-raise inside every future replay.
+            self._coalescers[user].push(v, sign=sign, tick=self.tick_count)
+            self._log({"op": "push", "user": user, "sign": sign,
+                       **_encode_row(v)})
+            ready = (self.auto_flush and not self._replaying
+                     and self._coalescers[user].ready())
+        if ready:
+            return self._trigger_flush(force=False, reason="width")
         return None
 
     def push_update(self, user, v) -> Optional[FlushReport]:
@@ -173,21 +298,23 @@ class StreamService:
 
     def tick(self) -> Optional[FlushReport]:
         """Advance the logical clock; fire deadline/window flushes."""
-        self.tick_count += 1
-        self._log({"op": "tick"})
-        if self._replaying:
-            return None
-        due = self._schedule and self._schedule[0][0] <= self.tick_count
-        expired = any(c.expired(self.tick_count)
-                      for c in self._coalescers.values())
+        with self._lock:
+            self.tick_count += 1
+            self._log({"op": "tick"})
+            if self._replaying:
+                return None
+            due = self._schedule and self._schedule[0][0] <= self.tick_count
+            expired = any(c.expired(self.tick_count)
+                          for c in self._coalescers.values())
         if due or expired:
-            return self.flush(reason="deadline")
+            return self._trigger_flush(force=False, reason="deadline")
         return None
 
     def decay(self, alpha) -> None:
         """Exact exponential forgetting across the fleet (``scale``)."""
-        self._log({"op": "decay", "alpha": float(alpha)})
-        self.store.decay(alpha)
+        with self._lock:
+            self._log({"op": "decay", "alpha": float(alpha)})
+            self.store.decay(alpha)
 
     # -- window forgetting ---------------------------------------------------
     def _schedule_row(self, user, v, *, due: int) -> None:
@@ -211,7 +338,20 @@ class StreamService:
         ``force`` every user with any pending row. Each round builds one
         zero-padded block per sign and dispatches at most one batched
         mutation per block (updates first, then guarded downdates).
+        Always synchronous — the caller's explicit flush runs in the
+        caller's thread even when a background worker is active.
         """
+        return self._flush_sync(force=force, reason=reason)
+
+    def _flush_sync(self, *, force: bool, reason: str) -> FlushReport:
+        with self._lock:
+            report = self._flush_locked(force=force, reason=reason)
+            if self._worker is not None and threading.current_thread() \
+                    is self._worker:
+                self._bg_reports.append(report)
+            return report
+
+    def _flush_locked(self, *, force: bool, reason: str) -> FlushReport:
         due_ready = bool(self._schedule
                          and self._schedule[0][0] <= self.tick_count)
         trigger = {u for u, c in self._coalescers.items()
@@ -288,7 +428,8 @@ class StreamService:
     def solve(self, user, b):
         """Solve against one user's maintained factor (reflects flushed
         state only — pending buffer rows are not yet absorbed)."""
-        return self.store.factor_for(user).solve(b)
+        with self._lock:
+            return self.store.factor_for(user).solve(b)
 
     def pending(self, user) -> int:
         return self._coalescers[user].pending if user in self._coalescers \
@@ -299,6 +440,7 @@ class StreamService:
         return (f"StreamService(users={self.store.active}, "
                 f"tick={self.tick_count}, buffered={buffered}, "
                 f"scheduled={len(self._schedule)}, window={self.window}, "
+                f"background={self.background_active}, "
                 f"store={self.store!r})")
 
 

@@ -1,40 +1,56 @@
 """``FactorStore``: a managed fleet of per-user Cholesky factors.
 
 One batched ``CholFactor`` of shape ``(capacity, n, n)`` holds every
-admitted user's statistics; slots are assigned on ``admit`` (growing the
-batch axis by doubling when full), returned on ``evict``, reclaimed by
-``evict_idle``, and the live set can be ``compact``ed back down. Every
-mutation of the fleet runs through ONE donated-buffer jitted step, so the
-serving loop never copies the O(B·n^2) fleet: the update block is absorbed
-first as a single fused batched rank-k update, then the downdate block via
-the feasibility guard (``downdate_guarded``) — the sign schedule the
-coalescer's equivalence proof covers. Exponential forgetting is
-``decay(alpha)`` (the engine's exact ``scale``), also donated.
+admitted user's statistics. Capacity moves along a fixed **bucket
+ladder** (default rungs double: ``(64, 128, 256, ...)`` at serving
+scale): admission assigns slots from an explicit slot map
+(``empty_slots`` / ``slot_to_user``) inside the current rung, and only a
+*ladder boundary* — the rung filling up — promotes the fleet to the next
+rung. Because the rungs are enumerable ahead of time, every executable
+the serving path can ever need is compilable ahead of time too:
+``warmup()`` (``repro.stream.warmup``) AOT-compiles the donated
+up/down/both/scale/slot_set/promote steps for every rung × width bucket,
+after which **steady-state serving never traces** — admission, eviction,
+flushes and rung promotion all dispatch pre-compiled executables.
 
-Instrumentation: ``mutations_issued()`` counts batched rank-k mutations
-dispatched to the engine — ONE per sign block per ``apply`` call,
-regardless of fleet size, the streaming analogue of
-``repro.kernels.sharded.launches_traced`` (there: pallas_call
-constructions per shard; here: batched engine mutations per flush — on the
-fused backend each one is a single device launch for the whole fleet,
-because vmap folds the batch into the kernel grid). Tests assert the
-launch-count story against this counter.
+Every mutation of the fleet runs through ONE donated-buffer step, so the
+serving loop never copies the O(B·n^2) fleet: the update block is
+absorbed first as a single fused batched rank-k update, then the
+downdate block via the feasibility guard (``downdate_guarded``) — the
+sign schedule the coalescer's equivalence proof covers. Exponential
+forgetting is ``decay(alpha)`` (the engine's exact ``scale``), also
+donated. Blocks are zero-padded to a **width bucket** (default
+``{1, width}``, the issue's coalesce-width ladder): zero columns are
+exact no-ops for both signs, so traffic shape never changes executable
+shape.
+
+Instrumentation, two counters:
+
+* ``mutations_issued()`` — batched rank-k mutations dispatched to the
+  engine, ONE per sign block per ``apply`` call regardless of fleet
+  size (the streaming analogue of
+  ``repro.kernels.sharded.launches_traced``).
+* ``traces_counted()`` — Python re-traces of the step functions (each
+  step body increments it exactly once per trace). This is the
+  compile-counter hook behind the retrace guard
+  (``repro.stream.warmup.assert_no_retrace``): after ``warmup()`` a
+  serving sequence must move ``mutations_issued`` but NOT
+  ``traces_counted`` — any post-warmup trace is a hard test failure.
 
 Sharded placement (DESIGN.md §10): constructed with ``backend='sharded'``
 and a ``mesh=``/``axis=`` binding, the fleet's members are each
-column-sharded over the mesh — per-user factors too big for one device —
-and the same donated steps dispatch per-shard through the fleet-native
-distributed driver: one kernel launch per shard per sign block,
-independent of the fleet size (``kernels.sharded.launches_traced`` is the
-counter for that half of the story). admit/grow/evict/compact/decay all
-preserve the placement.
+column-sharded over the mesh and the same donated steps dispatch
+per-shard through the fleet-native distributed driver: one kernel launch
+per shard per sign block, independent of the fleet size. Warmup lowers
+against sharded avals (``jax.ShapeDtypeStruct(..., sharding=...)``), so
+the AOT executables are placement-exact.
 """
 from __future__ import annotations
 
 import contextlib
 import functools
 import warnings
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,7 +62,7 @@ from repro.core.precision import Precision
 
 @contextlib.contextmanager
 def _quiet_donation():
-    """Suppress the unusable-donation warning around OUR jitted steps only.
+    """Suppress the unusable-donation warning around OUR steps only.
 
     Donation is best-effort: XLA:CPU cannot donate and warns per compile.
     It is still correct (and load-bearing) on TPU/GPU, where the fleet
@@ -62,15 +78,80 @@ def _quiet_donation():
 # engine (one per sign block per apply). See module docstring.
 _MUTATIONS_ISSUED = 0
 
+# Python traces of the step functions: each step body bumps it once per
+# trace (tracing executes the body; cached executions do not). The
+# retrace guard reads this.
+_TRACES = 0
+
 
 def mutations_issued() -> int:
     """Cumulative batched mutations dispatched by every store (see above)."""
     return _MUTATIONS_ISSUED
 
 
+def traces_counted() -> int:
+    """Cumulative step-function traces across every store — the
+    compile-counter the retrace guard (warmup module) asserts against."""
+    return _TRACES
+
+
 def _count_mutation(k: int = 1) -> None:
     global _MUTATIONS_ISSUED
     _MUTATIONS_ISSUED += k
+
+
+def _count_trace() -> None:
+    global _TRACES
+    _TRACES += 1
+
+
+# -- the bucket ladder --------------------------------------------------------
+
+#: Serving-scale default rungs (the issue's B ladder). Stores built with
+#: a bare ``capacity=`` derive a doubling ladder from it instead, so small
+#: test/bench fleets stay small; production configs pass this explicitly.
+DEFAULT_LADDER = (64, 128, 256, 512, 1024, 2048)
+
+_DERIVED_RUNGS = 8  # capacity -> (c, 2c, 4c, ... c*2^7)
+
+
+class LadderFullError(RuntimeError):
+    """Admission refused: the top ladder rung is full.
+
+    The fixed ladder is what makes trace-free serving possible (every
+    reachable capacity is pre-compiled), so the store will not silently
+    grow past it. Evict idle users, ``compact()``, or construct the
+    store with a taller ``ladder=``.
+    """
+
+
+def ladder_from(capacity: int, *, rungs: int = _DERIVED_RUNGS
+                ) -> Tuple[int, ...]:
+    """The derived doubling ladder rooted at ``capacity``."""
+    return tuple(capacity << i for i in range(rungs))
+
+
+def _validate_ladder(ladder) -> Tuple[int, ...]:
+    rungs = tuple(int(c) for c in ladder)
+    if not rungs or any(c < 1 for c in rungs):
+        raise ValueError(f"ladder rungs must be positive, got {rungs}")
+    if any(b <= a for a, b in zip(rungs, rungs[1:])):
+        raise ValueError(f"ladder must be strictly increasing, got {rungs}")
+    return rungs
+
+
+def _width_buckets(width: int, widths) -> Tuple[int, ...]:
+    """Sorted width buckets; must be able to carry a full-width block."""
+    if widths is None:
+        buckets = (1, width) if width > 1 else (1,)
+    else:
+        buckets = tuple(sorted({int(w) for w in widths}))
+    if not buckets or any(w < 1 for w in buckets):
+        raise ValueError(f"width buckets must be positive, got {buckets}")
+    if buckets[-1] < width:
+        raise ValueError(
+            f"largest width bucket {buckets[-1]} < coalesce width {width}")
+    return buckets
 
 
 def row_dtype_for(factor_dtype) -> np.dtype:
@@ -97,48 +178,124 @@ def fleet_sharding(mesh, axis):
     return NamedSharding(mesh, PartitionSpec(None, None, axis_tuple(axis)))
 
 
+# -- the step set: jitted fallbacks + AOT executable cache -------------------
+
+
+def _shape_key(args) -> tuple:
+    """Hashable (shape, dtype) signature of concrete args or avals."""
+    return tuple((tuple(np.shape(a)), jnp.dtype(a.dtype).name) for a in args)
+
+
+class StepSet:
+    """Donated mutation steps for one execution-metadata signature.
+
+    Two dispatch tiers share one set of step *functions*:
+
+    * ``jitted`` — ``jax.jit(step, donate_argnums=0)`` callables. Cold
+      path: first call at a new shape traces (``traces_counted`` moves).
+    * ``compiled`` — AOT executables from
+      ``jit(...).lower(avals).compile()``, keyed on the arg shape/dtype
+      signature. ``FactorStore.warmup()`` fills this for every ladder
+      rung × width bucket; ``call`` prefers it, so a warmed serving path
+      never reaches the tracing tier.
+
+    ``cold_dispatches`` counts calls that missed the executable cache —
+    a softer diagnostic than the trace counter (a miss may still hit the
+    jit cache without tracing).
+    """
+
+    def __init__(self, jitted: dict):
+        self.jitted = jitted
+        self.compiled: Dict[tuple, object] = {}
+        self.cold_dispatches = 0
+
+    def call(self, name: str, *args):
+        fn = self.compiled.get((name,) + _shape_key(args))
+        if fn is None:
+            self.cold_dispatches += 1
+            fn = self.jitted[name]
+        with _quiet_donation():
+            return fn(*args)
+
+    def compile_step(self, name: str, avals) -> bool:
+        """AOT-compile ``name`` for ``avals`` (ShapeDtypeStructs); returns
+        True when a new executable was built, False on a cache hit."""
+        key = (name,) + _shape_key(avals)
+        if key in self.compiled:
+            return False
+        with _quiet_donation():
+            self.compiled[key] = self.jitted[name].lower(*avals).compile()
+        return True
+
+    @property
+    def executables(self) -> int:
+        return len(self.compiled)
+
+
 @functools.lru_cache(maxsize=64)
 def _steps_for(panel: int, backend: str, interpret: Optional[bool],
-               precision: Optional[Precision], mesh=None, axis="model"):
-    """Donated jitted mutation steps, shared across stores with equal meta.
+               precision: Optional[Precision], mesh=None, axis="model"
+               ) -> StepSet:
+    """The donated mutation ``StepSet``, shared across stores with equal
+    meta.
 
-    jit caches key on (closure identity, shapes); caching the closures here
-    means two stores with the same execution metadata — or one store timed
-    after a warmup store in the benchmark — share compiled executables.
-    ``mesh``/``axis`` ride for sharded placements (jax Meshes hash by axis
-    names + device ids, so equal meshes share one entry): the steps then
-    dispatch per-shard through the fleet-native distributed driver, and
-    donation keeps the sharded fleet in place.
+    jit caches key on (closure identity, shapes); caching the closures
+    here means two stores with the same execution metadata — or a store
+    restored after a crash in the same process — share both the jit
+    cache AND the AOT executable cache, so a warmed signature stays warm
+    across store instances. ``mesh``/``axis`` ride for sharded placements
+    (jax Meshes hash by axis names + device ids, so equal meshes share
+    one entry): the steps then dispatch per-shard through the
+    fleet-native distributed driver, and donation keeps the sharded
+    fleet in place.
     """
     meta = dict(panel=panel, backend=backend, interpret=interpret,
                 precision=precision, mesh=mesh, axis=axis)
 
     def up_only(data, vup):
+        _count_trace()
         return CholFactor.from_factor(data, **meta).update(vup).data
 
     def down_only(data, vdn):
+        _count_trace()
         f, ok = CholFactor.from_factor(data, **meta).downdate_guarded(vdn)
         return f.data, ok
 
     def both(data, vup, vdn):
+        _count_trace()
         f = CholFactor.from_factor(data, **meta).update(vup)
         f, ok = f.downdate_guarded(vdn)
         return f.data, ok
 
     def scale(data, alpha):
+        _count_trace()
         return CholFactor.from_factor(data, **meta).scale(alpha).data
 
     def slot_set(data, slot, block):
+        _count_trace()
         return data.at[slot].set(block.astype(data.dtype))
 
+    def promote(data, fresh):
+        # Rung promotion: the one amortised O(B n^2) copy, now an AOT
+        # step like everything else so a ladder boundary crossed in
+        # steady state does not trace.
+        _count_trace()
+        return jnp.concatenate([data, fresh.astype(data.dtype)])
+
     donate = dict(donate_argnums=0)
-    return {
+    out = None
+    if mesh is not None:
+        # Promotion output must land on the fleet placement directly —
+        # an eager re-pin after the fact would defeat donation.
+        out = fleet_sharding(mesh, axis)
+    return StepSet({
         "up": jax.jit(up_only, **donate),
         "down": jax.jit(down_only, **donate),
         "both": jax.jit(both, **donate),
         "scale": jax.jit(scale, **donate),
         "slot_set": jax.jit(slot_set, **donate),
-    }
+        "promote": jax.jit(promote, out_shardings=out, **donate),
+    })
 
 
 class FactorStore:
@@ -146,18 +303,27 @@ class FactorStore:
 
     Args:
       n: per-user factor dimension.
-      capacity: initial slot count (grows by doubling on demand).
-      width: coalesce width k — the static rank of every flush mutation
-        (blocks are zero-padded to it, so jit never re-traces on traffic).
+      capacity: requested initial slot count — snapped UP to the smallest
+        ladder rung that holds it.
+      ladder: the fixed capacity ladder (strictly increasing). Default:
+        a doubling ladder rooted at ``capacity`` (``ladder_from``);
+        serving configs pass an explicit one (e.g. ``DEFAULT_LADDER``).
+        Admission past the top rung raises ``LadderFullError`` — the
+        store never silently grows past its pre-compiled shapes.
+      width: coalesce width k — the static max rank of a flush mutation.
+      widths: the width buckets blocks are zero-padded to (default
+        ``{1, width}``): a flush picks the smallest bucket that carries
+        its largest per-slot row count, so near-empty flushes pay k=1
+        shapes, full ones k=width — all pre-compiled by ``warmup()``.
       panel / backend / interpret / precision: execution metadata threaded
         onto the fleet's ``CholFactor`` (DESIGN.md §7/§8).
       mesh / axis: sharded placement (DESIGN.md §10) — with
         ``backend='sharded'`` every fleet member is column-sharded
-        ``P(None, None, axis)`` over the mesh, the donated jitted steps
-        dispatch per-shard through the fleet-native distributed driver
-        (one kernel launch per shard per sign block, independent of the
-        fleet size), and every membership operation (admit / grow / evict
-        / compact / decay) preserves the placement.
+        ``P(None, None, axis)`` over the mesh and the donated steps
+        dispatch per-shard (one kernel launch per shard per sign block,
+        independent of the fleet size); every membership operation
+        (admit / promote / evict / compact / decay) preserves the
+        placement.
       init_scale: admitted slots start as the factor of ``init_scale * I``
         (the ridge/eps warm start).
       dtype: logical dtype of the fleet (storage dtype under a precision
@@ -165,6 +331,8 @@ class FactorStore:
     """
 
     def __init__(self, n: int, *, capacity: int = 8, width: int = 16,
+                 ladder: Optional[Tuple[int, ...]] = None,
+                 widths: Optional[Tuple[int, ...]] = None,
                  panel: int = 64, backend: str = "auto",
                  interpret: Optional[bool] = None, precision=None,
                  mesh=None, axis="model",
@@ -180,27 +348,48 @@ class FactorStore:
             raise ValueError(
                 f"mesh= placement requires backend='sharded' "
                 f"(got backend={backend!r})")
+        self.ladder = (_validate_ladder(ladder) if ladder is not None
+                       else ladder_from(capacity))
+        capacity = self._rung_for(capacity)
         policy = Precision.parse(precision)
         storage = jnp.dtype(dtype) if policy is None else jnp.dtype(
             policy.storage_for(dtype))
         self.n = n
         self.width = width
+        self.widths = _width_buckets(width, widths)
         self.init_scale = float(init_scale)
         self._mesh = mesh if backend == "sharded" else None
         self._axis = axis
-        self._eye = jnp.eye(n, dtype=storage)
-        data = jnp.float32(np.sqrt(self.init_scale)) * jnp.broadcast_to(
-            self._eye, (capacity, n, n))
+        self._storage = storage
         self._factor = CholFactor.from_factor(
-            self._place(jnp.asarray(data, storage)), panel=panel,
-            backend=backend, interpret=interpret, precision=policy,
-            mesh=self._mesh, axis=axis)
+            self._place(jnp.asarray(self._fresh_blocks(capacity))),
+            panel=panel, backend=backend, interpret=interpret,
+            precision=policy, mesh=self._mesh, axis=axis)
         self._slot_of: Dict[object, int] = {}
-        self._user_of: Dict[int, object] = {}
-        self._free: List[int] = list(range(capacity - 1, -1, -1))
+        self._slot_to_user: Dict[int, object] = {}
+        self._empty_slots: List[int] = list(range(capacity - 1, -1, -1))
         self._last_used: Dict[object, int] = {}
         self._steps = _steps_for(panel, backend, interpret, policy,
                                  self._mesh, _axis_key(axis))
+
+    # -- ladder arithmetic ---------------------------------------------------
+    def _rung_for(self, capacity: int) -> int:
+        """Smallest ladder rung holding ``capacity`` slots."""
+        for rung in self.ladder:
+            if rung >= capacity:
+                return rung
+        raise LadderFullError(
+            f"{capacity} slots exceed the top ladder rung "
+            f"{self.ladder[-1]} (ladder={self.ladder})")
+
+    def _fresh_blocks(self, count: int) -> np.ndarray:
+        """``count`` stacked warm-start factors ``sqrt(init_scale) * I``,
+        built host-side: the serving path stays free of eager device ops
+        (everything it dispatches is a pre-compiled step)."""
+        eye = np.sqrt(self.init_scale, dtype=np.float32) * np.eye(
+            self.n, dtype=np.float32)
+        return np.broadcast_to(
+            eye.astype(self._storage), (count, self.n, self.n))
 
     # -- sharded placement ---------------------------------------------------
     def _place(self, data):
@@ -213,28 +402,41 @@ class FactorStore:
     @classmethod
     def from_state(cls, factor: CholFactor, *, width: int,
                    slots: Dict[object, int], last_used: Dict[object, int],
-                   init_scale: float) -> "FactorStore":
+                   init_scale: float,
+                   ladder: Optional[Tuple[int, ...]] = None,
+                   widths: Optional[Tuple[int, ...]] = None) -> "FactorStore":
         """Rebuild a store around restored fleet data + slot table.
 
         A sharded fleet rides in on the factor's own mesh/axis aux (the
         durability layer rebuilds the mesh from checkpoint meta before
-        calling this), so the restored store re-pins the placement.
+        calling this), so the restored store re-pins the placement. The
+        ladder defaults to a doubling ladder rooted at the restored
+        capacity — pre-ladder checkpoints restore with their historical
+        grow schedule.
         """
         if not factor.batched:
             raise ValueError("fleet factor must be batched (B, n, n)")
+        cap = factor.data.shape[0]
         self = cls.__new__(cls)
         self.n = factor.n
         self.width = width
+        self.widths = _width_buckets(width, widths)
+        self.ladder = (_validate_ladder(ladder) if ladder is not None
+                       else ladder_from(cap))
+        if cap not in self.ladder:
+            raise ValueError(
+                f"restored capacity {cap} is not a rung of the ladder "
+                f"{self.ladder}")
         self.init_scale = float(init_scale)
         self._mesh = factor.mesh if factor.backend == "sharded" else None
         self._axis = factor.axis
-        self._eye = jnp.eye(factor.n, dtype=factor.dtype)
+        self._storage = jnp.dtype(factor.dtype)
         self._factor = factor.replace(data=self._place(factor.data))
         self._slot_of = dict(slots)
-        self._user_of = {s: u for u, s in self._slot_of.items()}
+        self._slot_to_user = {s: u for u, s in self._slot_of.items()}
         taken = set(self._slot_of.values())
-        cap = factor.data.shape[0]
-        self._free = [s for s in range(cap - 1, -1, -1) if s not in taken]
+        self._empty_slots = [s for s in range(cap - 1, -1, -1)
+                             if s not in taken]
         self._last_used = dict(last_used)
         self._steps = _steps_for(factor.panel, factor.backend,
                                  factor.interpret, factor.precision,
@@ -250,6 +452,21 @@ class FactorStore:
     @property
     def capacity(self) -> int:
         return self._factor.data.shape[0]
+
+    @property
+    def empty_slots(self) -> Tuple[int, ...]:
+        """Free slots at the current rung, next-assigned first (LIFO)."""
+        return tuple(reversed(self._empty_slots))
+
+    @property
+    def slot_to_user(self) -> Dict[int, object]:
+        """Occupied slot -> user (a copy; admission mutates the real map)."""
+        return dict(self._slot_to_user)
+
+    @property
+    def steps(self) -> StepSet:
+        """The shared step set (executable cache, cold-dispatch counter)."""
+        return self._steps
 
     @property
     def row_dtype(self) -> np.dtype:
@@ -280,70 +497,89 @@ class FactorStore:
         """A single-user view (shares the fleet's execution metadata)."""
         return self._factor.replace(data=self._factor.data[self.slot(user)])
 
+    # -- warmup (AOT executables) --------------------------------------------
+    def warmup(self, **kw):
+        """AOT-compile every ladder rung's executables; see
+        ``repro.stream.warmup.warmup_store`` for the knobs/report."""
+        from repro.stream.warmup import warmup_store
+
+        return warmup_store(self, **kw)
+
     # -- fleet membership ---------------------------------------------------
     def admit(self, user, *, scale: Optional[float] = None,
               tick: int = 0) -> int:
-        """Assign ``user`` a slot warm-started at ``scale * I`` (grows the
-        fleet when full). Idempotent for already-admitted users."""
+        """Assign ``user`` a slot warm-started at ``scale * I``, promoting
+        to the next ladder rung when the current one is full (raises
+        ``LadderFullError`` at the top). Idempotent for already-admitted
+        users."""
         if user in self._slot_of:
             self._last_used[user] = tick
             return self._slot_of[user]
-        if not self._free:
-            self._grow()
-        s = self._free.pop()
-        block = jnp.float32(np.sqrt(
-            self.init_scale if scale is None else float(scale))) * self._eye
-        with _quiet_donation():
-            new_data = self._steps["slot_set"](
-                self._factor.data, jnp.int32(s), block)
+        if not self._empty_slots:
+            self._promote()
+        s = self._empty_slots.pop()
+        block = np.sqrt(
+            self.init_scale if scale is None else float(scale),
+            dtype=np.float32) * np.eye(self.n, dtype=np.float32)
+        new_data = self._steps.call(
+            "slot_set", self._factor.data, np.int32(s),
+            block.astype(self._storage))
         self._factor = self._factor.replace(data=new_data)
         self._slot_of[user] = s
-        self._user_of[s] = user
+        self._slot_to_user[s] = user
         self._last_used[user] = tick
         return s
 
     def evict(self, user) -> int:
         """Free a user's slot (data is reset on the next admit).
 
-        This is the slot-table primitive. A store managed by a
+        This is the slot-map primitive. A store managed by a
         ``StreamService`` must be evicted through ``service.evict`` /
         ``service.evict_idle`` instead — the service also owns the user's
         coalescer, window schedule and WAL record, which this call cannot
         see.
         """
         s = self._slot_of.pop(user)
-        del self._user_of[s]
+        del self._slot_to_user[s]
         del self._last_used[user]
-        self._free.append(s)
+        self._empty_slots.append(s)
         return s
 
-    def _grow(self) -> None:
-        """Double the batch axis (the one amortised O(B n^2) copy);
-        re-pins the sharded placement on the grown fleet."""
+    def _promote(self) -> None:
+        """Cross the ladder boundary: concatenate fresh warm-start blocks
+        up to the next rung through the donated AOT ``promote`` step (the
+        one amortised O(B n^2) copy; placement-preserving)."""
         cap = self.capacity
-        fresh = jnp.float32(np.sqrt(self.init_scale)) * jnp.broadcast_to(
-            self._eye, (cap, self.n, self.n))
-        new_data = jnp.concatenate(
-            [self._factor.data, jnp.asarray(fresh, self._factor.dtype)])
-        self._factor = self._factor.replace(data=self._place(new_data))
-        self._free.extend(range(2 * cap - 1, cap - 1, -1))
+        idx = self.ladder.index(cap)
+        if idx + 1 >= len(self.ladder):
+            raise LadderFullError(
+                f"fleet full at the top ladder rung ({cap} slots, "
+                f"ladder={self.ladder}); evict users, compact(), or "
+                "construct the store with a taller ladder=")
+        nxt = self.ladder[idx + 1]
+        new_data = self._steps.call(
+            "promote", self._factor.data, self._fresh_blocks(nxt - cap))
+        self._factor = self._factor.replace(data=new_data)
+        self._empty_slots.extend(range(nxt - 1, cap - 1, -1))
 
     def compact(self, *, min_capacity: int = 1) -> Dict[object, int]:
-        """Shrink the fleet to its active slots (one gather + remap).
+        """Shrink the fleet to the smallest rung holding its active slots
+        (one gather + remap).
 
         Returns the new user -> slot mapping. The copy is explicit and
-        caller-scheduled — compaction is a maintenance event, not a serving-
-        loop step.
+        caller-scheduled — compaction is a maintenance event, not a
+        serving-loop step (it is the one membership operation allowed to
+        dispatch eagerly).
         """
         order = sorted(self._slot_of.items(), key=lambda kv: kv[1])
         keep = [s for _, s in order]
-        new_cap = max(len(keep), min_capacity)
+        new_cap = self._rung_for(max(len(keep), min_capacity))
         idx = keep + [0] * (new_cap - len(keep))  # pad slots: reset on admit
         data = self._factor.data[jnp.asarray(idx, jnp.int32)]
         self._factor = self._factor.replace(data=self._place(data))
         self._slot_of = {u: i for i, (u, _) in enumerate(order)}
-        self._user_of = {i: u for u, i in self._slot_of.items()}
-        self._free = list(range(new_cap - 1, len(keep) - 1, -1))
+        self._slot_to_user = {i: u for u, i in self._slot_of.items()}
+        self._empty_slots = list(range(new_cap - 1, len(keep) - 1, -1))
         return dict(self._slot_of)
 
     # -- mutations ----------------------------------------------------------
@@ -362,40 +598,50 @@ class FactorStore:
         """
         data = self._factor.data
         ok = None
-        with _quiet_donation():
-            if Vup is not None and Vdn is not None:
-                _count_mutation(2)
-                data, ok = self._steps["both"](
-                    data, jnp.asarray(Vup), jnp.asarray(Vdn))
-            elif Vup is not None:
-                _count_mutation(1)
-                data = self._steps["up"](data, jnp.asarray(Vup))
-            elif Vdn is not None:
-                _count_mutation(1)
-                data, ok = self._steps["down"](data, jnp.asarray(Vdn))
-            else:
-                return None
+        if Vup is not None and Vdn is not None:
+            _count_mutation(2)
+            data, ok = self._steps.call("both", data, Vup, Vdn)
+        elif Vup is not None:
+            _count_mutation(1)
+            data = self._steps.call("up", data, Vup)
+        elif Vdn is not None:
+            _count_mutation(1)
+            data, ok = self._steps.call("down", data, Vdn)
+        else:
+            return None
         self._factor = self._factor.replace(data=data)
         return ok
 
     def decay(self, alpha) -> None:
         """Exponential forgetting: every slot becomes the factor of
         ``alpha^2 A`` (exact, via the engine's ``scale``)."""
-        with _quiet_donation():
-            scaled = self._steps["scale"](self._factor.data,
-                                          jnp.float32(alpha))
+        scaled = self._steps.call("scale", self._factor.data,
+                                  np.float32(alpha))
         self._factor = self._factor.replace(data=scaled)
 
+    def bucket_for(self, k: int) -> int:
+        """Smallest width bucket that carries ``k`` rows."""
+        for w in self.widths:
+            if w >= k:
+                return w
+        raise ValueError(
+            f"{k} rows exceed the largest width bucket {self.widths[-1]}")
+
     def pad_block(self, rows_by_slot: Dict[int, np.ndarray]) -> np.ndarray:
-        """Stack per-slot row lists into the static (capacity, n, width)
-        zero-padded block ``apply`` expects (zero columns are exact no-ops
-        for both signs, so the jitted step never re-traces on traffic)."""
-        out = np.zeros((self.capacity, self.n, self.width), self.row_dtype)
+        """Stack per-slot row lists into the static zero-padded
+        (capacity, n, bucket) block ``apply`` expects, where ``bucket``
+        is the smallest width bucket carrying the largest per-slot row
+        count (zero columns are exact no-ops for both signs, so the
+        executable shape depends only on the bucket, never on traffic)."""
+        k_max = max((rows.shape[0] for rows in rows_by_slot.values()),
+                    default=1)
+        if k_max > self.width:
+            raise ValueError(
+                f"{k_max} rows exceed coalesce width {self.width}")
+        bucket = self.bucket_for(max(k_max, 1))
+        out = np.zeros((self.capacity, self.n, bucket), self.row_dtype)
         for s, rows in rows_by_slot.items():
             k = rows.shape[0]
-            if k > self.width:
-                raise ValueError(
-                    f"slot {s}: {k} rows exceed coalesce width {self.width}")
             if k:
                 out[s, :, :k] = rows.T
         return out
@@ -403,4 +649,4 @@ class FactorStore:
     def __repr__(self):
         return (f"FactorStore(n={self.n}, capacity={self.capacity}, "
                 f"active={self.active}, width={self.width}, "
-                f"factor={self._factor!r})")
+                f"ladder={self.ladder}, factor={self._factor!r})")

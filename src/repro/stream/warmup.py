@@ -1,0 +1,171 @@
+"""AOT warmup + retrace guard: trace-free serving over the bucket ladder.
+
+The source paper's premise is that rank-k modification is bandwidth-bound
+and launch-dominated — every microsecond of host overhead on the serving
+path is a real fraction of the work. Tracing + XLA compilation inside a
+flush is *milliseconds to seconds*, and the grow-by-doubling fleet used
+to guarantee those stalls kept arriving as traffic ramped. The fix is
+the MaxText offline-inference pattern: because the ``FactorStore``'s
+capacity ladder and width buckets are FIXED and enumerable, every
+executable the serving path can ever dispatch is compilable ahead of
+time.
+
+``warmup_store(store)`` walks ``store.ladder`` × ``store.widths`` and
+``jax.jit(step, donate_argnums=0).lower(avals).compile()``s the donated
+up / down / both / scale / slot_set executables for each rung, plus the
+``promote`` executable for each rung boundary — from abstract
+``ShapeDtypeStruct``s, so warmup allocates **no** fleet-sized device
+memory. Sharded placements lower against sharded avals
+(``ShapeDtypeStruct(..., sharding=...)``), so the executables are
+placement-exact (single, batched, and sharded fleets all warm the same
+way). The executables land in the metadata-shared ``StepSet`` cache that
+``FactorStore`` dispatch prefers, so after warmup the serving loop —
+admit, flush, evict, readmit, decay, rung promotion — never reaches the
+tracing tier.
+
+The **retrace guard** is the contract's teeth: every step function body
+bumps ``repro.stream.store.traces_counted()`` exactly once per Python
+trace (tracing executes the body; cached executions do not — the
+compile-counter hook). ``assert_no_retrace()`` brackets a serving
+sequence and raises ``RetraceError`` if the counter moved, making any
+post-warmup trace a hard test failure rather than a silent latency
+spike. ``tests/test_stream_warmup.py`` drives an
+admit/push/flush/evict/readmit/checkpoint/restore/flush sequence across
+two ladder rungs under the guard.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.stream import store as store_mod
+from repro.stream.store import FactorStore, fleet_sharding
+
+
+class RetraceError(AssertionError):
+    """A step function re-traced inside an ``assert_no_retrace`` block."""
+
+
+@dataclasses.dataclass
+class TraceWatch:
+    """Live view of the trace counter inside a guard block."""
+
+    start: int
+
+    @property
+    def traces(self) -> int:
+        return store_mod.traces_counted() - self.start
+
+
+@contextlib.contextmanager
+def watch_traces():
+    """Count step traces across a block (no failure — diagnostics)."""
+    yield TraceWatch(start=store_mod.traces_counted())
+
+
+@contextlib.contextmanager
+def assert_no_retrace(what: str = "serving sequence"):
+    """Hard retrace guard: raise ``RetraceError`` if any step function
+    traces inside the block. Wrap post-warmup serving sequences with this
+    in tests — a trace on the warm path is a bug, not a slow request."""
+    watch = TraceWatch(start=store_mod.traces_counted())
+    yield watch
+    if watch.traces:
+        raise RetraceError(
+            f"{watch.traces} step trace(s) inside {what!r} — the warm "
+            "serving path must dispatch pre-compiled executables only "
+            "(did warmup() cover this rung/width/dtype signature?)")
+
+
+@dataclasses.dataclass
+class WarmupReport:
+    """What one ``warmup_store`` call compiled.
+
+    Attributes:
+      compiled: executables built by THIS call.
+      cached: signatures that were already in the shared executable cache
+        (a restored store in a live process re-warms for free).
+      rungs: ladder rungs covered.
+      widths: width buckets covered.
+      seconds: wall-clock spent lowering + compiling.
+    """
+
+    compiled: int = 0
+    cached: int = 0
+    rungs: Tuple[int, ...] = ()
+    widths: Tuple[int, ...] = ()
+    seconds: float = 0.0
+
+
+def _aval(shape, dtype, sharding=None):
+    if sharding is not None:
+        return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def warmup_store(store: FactorStore, *,
+                 rungs: Optional[Tuple[int, ...]] = None,
+                 widths: Optional[Tuple[int, ...]] = None) -> WarmupReport:
+    """AOT-compile the store's full executable ladder.
+
+    Args:
+      store: the fleet to warm. Executables key on the store's execution
+        metadata and land in the metadata-shared ``StepSet``, so every
+        store (and every restored store) with equal metadata shares them.
+      rungs: ladder subset to warm (default: the whole ladder — compact
+        can move DOWN a rung, so lower rungs stay reachable).
+      widths: width-bucket subset (default: the store's buckets).
+
+    Returns a ``WarmupReport``. Warmup is the one phase allowed to trace;
+    bracket everything after it with ``assert_no_retrace``.
+    """
+    rungs = store.ladder if rungs is None else tuple(rungs)
+    widths = store.widths if widths is None else tuple(widths)
+    for r in rungs:
+        if r not in store.ladder:
+            raise ValueError(f"rung {r} is not on the ladder {store.ladder}")
+    n = store.n
+    data_dt = store.factor.dtype
+    row_dt = store.row_dtype
+    sharding = (fleet_sharding(store._mesh, store._axis)
+                if store._mesh is not None else None)
+    steps = store.steps
+    report = WarmupReport(rungs=tuple(rungs), widths=tuple(widths))
+    t0 = time.perf_counter()
+
+    def build(name, avals):
+        if steps.compile_step(name, avals):
+            report.compiled += 1
+        else:
+            report.cached += 1
+
+    for cap in rungs:
+        data = _aval((cap, n, n), data_dt, sharding)
+        for w in widths:
+            vw = _aval((cap, n, w), row_dt)
+            build("up", (data, vw))
+            build("down", (data, vw))
+            for w2 in widths:
+                build("both", (data, vw, _aval((cap, n, w2), row_dt)))
+        build("scale", (data, _aval((), np.float32)))
+        build("slot_set", (data, _aval((), np.int32),
+                           _aval((n, n), data_dt)))
+    for cap, nxt in zip(store.ladder, store.ladder[1:]):
+        if cap in rungs or nxt in rungs:
+            build("promote", (_aval((cap, n, n), data_dt, sharding),
+                              _aval((nxt - cap, n, n), data_dt)))
+
+    report.seconds = time.perf_counter() - t0
+    return report
+
+
+def warmup_service(svc) -> WarmupReport:
+    """Warm a ``StreamService``'s store (the service adds no executables
+    of its own — flush, tick and the background worker all dispatch
+    through the store's step set)."""
+    return warmup_store(svc.store)
