@@ -188,6 +188,20 @@ def checkpoint_service(svc: StreamService, ckpt_dir, step: int, *,
     table from its ``extra`` meta, buffers/schedule from the new WAL's
     head records, and any later traffic from the WAL's tail.
     """
+    # The whole snapshot + rotation runs under the service lock: the
+    # background flush worker mutates fleet/rings/schedule/WAL under it,
+    # so without it a checkpoint taken mid-flush could record torn state —
+    # or rotate the WAL such that the in-flight flush's record lands in
+    # the NEW segment whose fleet snapshot already includes that flush,
+    # and replay double-applies it. The RLock serialises us after any
+    # in-flight flush; requests still queued run against (and log after)
+    # the rotated segment, which replay applies on top of the snapshot.
+    with svc._lock:
+        return _checkpoint_locked(svc, ckpt_dir, step, keep=keep)
+
+
+def _checkpoint_locked(svc: StreamService, ckpt_dir, step: int, *,
+                       keep: int) -> Path:
     store = svc.store
     f = store.factor
 
@@ -342,7 +356,11 @@ def restore_service(ckpt_dir, *, step: Optional[int] = None,
         # from_state then derives the doubling ladder from the restored
         # capacity (the historical grow schedule) and default buckets.
         ladder=tuple(s["ladder"]) if s.get("ladder") else None,
-        widths=tuple(s["widths"]) if s.get("widths") else None)
+        widths=tuple(s["widths"]) if s.get("widths") else None,
+        # Recorded next-assigned-first; restores the live LIFO admission
+        # order (eviction history makes it diverge from any derived one).
+        empty_slots=(tuple(s["empty_slots"])
+                     if s.get("empty_slots") is not None else None))
     if warm:
         store.warmup()
     svc = StreamService(store, window=s["window"], deadline=s["deadline"],

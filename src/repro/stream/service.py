@@ -24,10 +24,12 @@ worker (MaxText ``JetThread``-style) runs the flushes instead of the
 caller. ``push``/``tick`` then only enqueue a flush *request* — the
 producer returns immediately while the worker drains rings, builds
 blocks and dispatches the donated steps, so host-side coalescing
-overlaps device mutations. Requests are coalesced (a pending request
-absorbs later triggers) and the queue is bounded, so a producer that
-outruns the device blocks on ``put`` — backpressure, not unbounded
-buffering. ``tick()``/``flush()`` stay the synchronous fallback: with no
+overlaps device mutations. Every trigger enqueues; at each wake-up the
+worker coalesces everything queued into ONE flush (selection recomputes
+from the rings, so a burst of triggers is a single drain/apply pass),
+and the queue is bounded, so a producer that outruns the device blocks
+on ``put`` — backpressure, not unbounded buffering.
+``tick()``/``flush()`` stay the synchronous fallback: with no
 worker running, behaviour is exactly the pre-worker serving loop. All
 state-changing entry points share one lock, so either mode (or both
 interleaved) is safe.
@@ -86,10 +88,13 @@ class FlushReport:
 
 class _FlushWorker(threading.Thread):
     """Daemon flush worker (the MaxText ``JetThread`` shape): consumes
-    coalesced flush requests from a bounded queue and runs them under the
-    service lock. An exception is captured, not swallowed — it re-raises
-    at the next ``drain()``/``stop_background()`` (and the worker stops
-    accepting work), so a poisoned flush cannot silently drop traffic."""
+    flush requests from a bounded queue and runs them under the service
+    lock, coalescing everything queued at wake-up into ONE flush (first
+    request's reason, any request's force). An exception is captured, not
+    swallowed — it re-raises at the next ``drain()``/``stop_background()``
+    and the worker drops (but still acknowledges) later requests until
+    the failure is cleared, so a poisoned flush cannot silently drop
+    traffic; the dropped requests' rows stay buffered in the rings."""
 
     _STOP = object()
 
@@ -101,17 +106,28 @@ class _FlushWorker(threading.Thread):
 
     def run(self) -> None:
         while True:
-            req = self.requests.get()
+            batch = [self.requests.get()]
+            # Coalesce: one flush serves every request already queued —
+            # flush selection recomputes from the rings, so a burst of
+            # triggers needs (and gets) a single drain/apply pass.
+            while True:
+                try:
+                    batch.append(self.requests.get_nowait())
+                except queue.Empty:
+                    break
+            stop = self._STOP in batch
+            reqs = [r for r in batch if r is not self._STOP]
             try:
-                if req is self._STOP:
-                    return
-                if self.exception is None:
-                    force, reason = req
-                    self._svc._flush_sync(force=force, reason=reason)
+                if reqs and self.exception is None:
+                    force = any(f for f, _ in reqs)
+                    self._svc._flush_sync(force=force, reason=reqs[0][1])
             except BaseException as e:  # noqa: BLE001 — reported at drain
                 self.exception = e
             finally:
-                self.requests.task_done()
+                for _ in batch:
+                    self.requests.task_done()
+            if stop:
+                return
 
     def submit(self, force: bool, reason: str) -> None:
         self.requests.put((force, reason))
@@ -135,8 +151,9 @@ class StreamService:
       capacity: per-sign ring capacity per user (default ``2 * width``).
       background: start the background flush worker immediately (same as
         calling ``start_background()`` after construction).
-      queue_size: bound on coalesced pending flush requests (producers
-        block when it is full — backpressure).
+      queue_size: bound on pending flush requests. The worker coalesces
+        everything queued into one flush per wake-up; producers block on
+        enqueue when the bound is hit — backpressure.
     """
 
     def __init__(self, store: FactorStore, *, window: Optional[int] = None,
@@ -180,36 +197,52 @@ class StreamService:
 
     def stop_background(self) -> None:
         """Stop the worker after it drains its queue; re-raises any
-        exception the worker captured. Pending ring contents stay
-        buffered — they flush on the next trigger or ``flush(force=)``."""
+        exception the worker captured (with the pre-failure reports
+        attached as ``partial_reports`` and cleared, like ``drain``).
+        Pending ring contents stay buffered — they flush on the next
+        trigger or ``flush(force=)``."""
         if self._worker is None:
             return
         self._worker.stop()
         exc, self._worker = self._worker.exception, None
         if exc is not None:
-            raise exc
+            raise self._attach_partial_reports(exc)
 
     def drain(self) -> Tuple[FlushReport, ...]:
         """Block until every enqueued background flush has run; returns
-        (and clears) their reports. Re-raises a captured worker
-        exception. No-op (empty tuple) without a worker."""
+        (and clears) their reports. A captured worker exception re-raises
+        here instead, carrying the reports of the flushes that DID run
+        before the failure as ``exc.partial_reports`` (and clearing them,
+        so they never leak into a later drain). Requests enqueued after a
+        failure are acknowledged but dropped until a drain clears it —
+        their rows stay buffered in the rings. No-op (empty tuple)
+        without a worker."""
         if self._worker is None:
             return ()
         self._worker.requests.join()
         if self._worker.exception is not None:
             exc, self._worker.exception = self._worker.exception, None
-            raise exc
+            raise self._attach_partial_reports(exc)
         with self._lock:
             reports, self._bg_reports = tuple(self._bg_reports), []
         return reports
 
+    def _attach_partial_reports(self, exc: BaseException) -> BaseException:
+        with self._lock:
+            exc.partial_reports = tuple(self._bg_reports)
+            self._bg_reports = []
+        return exc
+
     def _trigger_flush(self, *, force: bool, reason: str
                        ) -> Optional[FlushReport]:
-        """Route a flush trigger: enqueue to the worker (coalescing with
-        an already-pending request) or run synchronously."""
+        """Route a flush trigger: enqueue to the worker or run
+        synchronously. Every trigger is enqueued (the worker coalesces
+        whatever is queued into one flush), so a producer that outruns
+        the device fills the bounded queue and blocks on ``put`` —
+        genuine backpressure. Called OUTSIDE the service lock, so a
+        blocked producer never stalls the worker."""
         if self.background_active:
-            if self._worker.requests.empty():
-                self._worker.submit(force, reason)
+            self._worker.submit(force, reason)
             return None
         return self._flush_sync(force=force, reason=reason)
 

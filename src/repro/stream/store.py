@@ -404,7 +404,9 @@ class FactorStore:
                    slots: Dict[object, int], last_used: Dict[object, int],
                    init_scale: float,
                    ladder: Optional[Tuple[int, ...]] = None,
-                   widths: Optional[Tuple[int, ...]] = None) -> "FactorStore":
+                   widths: Optional[Tuple[int, ...]] = None,
+                   empty_slots: Optional[Tuple[int, ...]] = None
+                   ) -> "FactorStore":
         """Rebuild a store around restored fleet data + slot table.
 
         A sharded fleet rides in on the factor's own mesh/axis aux (the
@@ -413,6 +415,14 @@ class FactorStore:
         ladder defaults to a doubling ladder rooted at the restored
         capacity — pre-ladder checkpoints restore with their historical
         grow schedule.
+
+        ``empty_slots``: the live store's free-slot order in
+        ``empty_slots``-property convention (next-assigned first). Passing
+        it makes restored admission pop the SAME slots the pre-crash
+        process would have — required for bitwise kill-and-restart, since
+        eviction history makes the LIFO order diverge from any derived
+        one. Omitted (pre-slot-map checkpoints), the order falls back to
+        descending slot index.
         """
         if not factor.batched:
             raise ValueError("fleet factor must be batched (B, n, n)")
@@ -435,8 +445,18 @@ class FactorStore:
         self._slot_of = dict(slots)
         self._slot_to_user = {s: u for u, s in self._slot_of.items()}
         taken = set(self._slot_of.values())
-        self._empty_slots = [s for s in range(cap - 1, -1, -1)
-                             if s not in taken]
+        free = {s for s in range(cap) if s not in taken}
+        if empty_slots is None:
+            self._empty_slots = sorted(free, reverse=True)
+        else:
+            if set(empty_slots) != free or len(empty_slots) != len(free):
+                raise ValueError(
+                    f"restored empty_slots {tuple(empty_slots)} do not "
+                    f"match the slots the slot table leaves free "
+                    f"({sorted(free)})")
+            # Property order is next-assigned FIRST; the internal stack
+            # pops from the end.
+            self._empty_slots = list(reversed(empty_slots))
         self._last_used = dict(last_used)
         self._steps = _steps_for(factor.panel, factor.backend,
                                  factor.interpret, factor.precision,

@@ -366,3 +366,49 @@ def test_replay_log_read_missing_and_append(tmp_path):
     log.close()
     recs = ReplayLog.read(tmp_path / "wal.jsonl")
     assert [r["op"] for r in recs] == ["tick", "flush"]
+
+
+# ---------------------------------------------------------------------------
+# Free-slot LIFO order survives kill-and-restart
+# ---------------------------------------------------------------------------
+
+
+def test_restore_preserves_empty_slot_lifo_order(tmp_path):
+    """After evictions the live LIFO free-slot order diverges from any
+    derived (descending) order; the checkpoint records it and restore
+    must pop the SAME slot the pre-crash process would have — otherwise
+    slot-indexed state diverges on replayed admissions."""
+    st = FactorStore(6, capacity=8, width=2, panel=4, backend="reference")
+    svc = StreamService(st, auto_flush=False)
+    for u in range(4):
+        svc.admit(u)
+    svc.evict(0)
+    svc.evict(3)
+    assert svc.store.empty_slots[0] == 3       # LIFO: last evicted first
+    checkpoint_service(svc, tmp_path, step=1)
+
+    survivor = restore_service(tmp_path)
+    assert survivor.store.empty_slots == svc.store.empty_slots
+    # Bitwise restart: the next admission lands in the same slot.
+    assert survivor.admit("fresh") == svc.admit("fresh") == 3
+
+
+def test_from_state_empty_slots_fallback_and_validation():
+    """Pre-slot-map checkpoints (no recorded order) fall back to
+    descending; a recorded order inconsistent with the slot table is
+    refused loudly."""
+    st = FactorStore(6, capacity=4, width=2, panel=4, backend="reference")
+    st.admit(0)
+    st.admit(1)
+    st.evict(0)
+
+    re = FactorStore.from_state(
+        st.factor, width=st.width, slots={1: st.slot(1)}, last_used={1: 0},
+        init_scale=st.init_scale, ladder=st.ladder, widths=st.widths)
+    assert re.empty_slots == (0, 2, 3)          # derived: descending stack
+
+    with pytest.raises(ValueError, match="empty_slots"):
+        FactorStore.from_state(
+            st.factor, width=st.width, slots={1: st.slot(1)},
+            last_used={1: 0}, init_scale=st.init_scale, ladder=st.ladder,
+            widths=st.widths, empty_slots=(0, 1, 3))

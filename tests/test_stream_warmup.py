@@ -367,3 +367,100 @@ def test_background_service_checkpoint_restore_restarts_worker(tmp_path):
         np.asarray(survivor.store.factor.data, np.float32),
         np.asarray(svc.store.factor.data, np.float32), atol=1e-6)
     survivor.stop_background()
+
+
+def test_background_triggers_enqueue_and_worker_coalesces():
+    """Every trigger enqueues (the bounded queue can actually fill —
+    backpressure is real, not dead code) and the worker folds everything
+    queued at wake-up into one flush pass."""
+    st = FactorStore(6, capacity=4, width=2, panel=4, backend="reference")
+    svc = StreamService(st, auto_flush=True, background=True, queue_size=8)
+    orig = svc._flush_sync
+    entered, release = threading.Event(), threading.Event()
+
+    def gated(**kw):
+        entered.set()
+        release.wait(5)
+        return orig(**kw)
+
+    svc._flush_sync = gated
+    for v in _rows(6, 2, seed=90):
+        svc.push(0, v)                     # trigger 1 -> worker parks
+    assert entered.wait(5)
+    for u in (1, 2):
+        for v in _rows(6, 2, seed=90 + u):
+            svc.push(u, v)                 # triggers 2 and 3 queue up
+    assert svc._worker.requests.qsize() == 2
+    release.set()
+
+    reports = svc.drain()
+    svc.stop_background()
+    # 3 requests, <= 2 flush passes: the parked pass plus one coalesced.
+    assert len(reports) <= 2
+    assert sum(sum(r.absorbed.values()) for r in reports) == 6
+    for u in range(3):
+        assert svc.pending(u) == 0
+
+
+def test_drain_failure_clears_partial_reports():
+    """A worker failure must not leave pre-failure reports behind to
+    surface on a later unrelated drain; they ride on the exception."""
+    st = FactorStore(6, capacity=2, width=2, panel=4, backend="reference")
+    svc = StreamService(st, auto_flush=True, background=True)
+    for v in _rows(6, 2, seed=84):
+        svc.push("u", v)                   # good flush -> one report
+    svc._worker.requests.join()
+
+    def boom(Vup=None, Vdn=None):
+        raise RuntimeError("device on fire")
+
+    st.apply = boom
+    for v in _rows(6, 2, seed=85):
+        svc.push("u", v)
+    with pytest.raises(RuntimeError, match="device on fire") as ei:
+        svc.drain()
+    assert len(ei.value.partial_reports) == 1
+    assert sum(ei.value.partial_reports[0].absorbed.values()) == 2
+    assert svc.drain() == ()               # nothing left behind
+    svc.stop_background()
+
+
+def test_checkpoint_waits_for_inflight_background_flush(tmp_path):
+    """checkpoint_service serialises against the worker via the service
+    lock: a checkpoint requested mid-flush snapshots the post-flush
+    state, never a torn one."""
+    st = FactorStore(6, capacity=2, width=2, panel=4, backend="reference")
+    svc = StreamService(st, auto_flush=True, background=True)
+    orig = st.apply
+    entered, release = threading.Event(), threading.Event()
+
+    def slow(Vup=None, Vdn=None):
+        entered.set()
+        release.wait(5)
+        return orig(Vup, Vdn)
+
+    st.apply = slow
+    for v in _rows(6, 2, seed=86):
+        svc.push("u", v)
+    assert entered.wait(5)                 # worker mid-flush, lock held
+    done = threading.Event()
+
+    def snapshot():
+        checkpoint_service(svc, tmp_path, step=1)
+        done.set()
+
+    t = threading.Thread(target=snapshot)
+    t.start()
+    assert not done.wait(0.2)              # blocked until the flush lands
+    release.set()
+    t.join(10)
+    assert done.is_set()
+    svc.drain()
+    svc.stop_background()
+
+    survivor = restore_service(tmp_path)
+    assert survivor.pending("u") == 0      # flush preceded the snapshot
+    np.testing.assert_allclose(
+        np.asarray(survivor.store.factor.data, np.float32),
+        np.asarray(svc.store.factor.data, np.float32), atol=1e-6)
+    survivor.stop_background()
