@@ -38,7 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import CholFactor, Precision, ref
+from repro.core import CholFactor, Precision, backends, ref
 from repro.kernels import fused as fused_k
 from repro.kernels import ops as kernel_ops
 
@@ -82,6 +82,15 @@ def run(csv_rows, *, ns=(512, 1024, 2048, 4096), ks=(16, 1), quick=False,
         dtypes=("float32",)):
     if quick:
         ns = (256, 512)
+    # Every row records its execution mode (ISSUE 7): ``interpret=0|1`` so
+    # report.py can footnote dispatch-bound interpret wall-clock, and
+    # ``lowering=`` for the kernel rows (jnp rows record 'none'). The jnp
+    # backends always XLA-compile — interpret only applies to Pallas.
+    auto_lowering = backends.resolve_lowering("auto")
+
+    def mode(interp=False, lowering="none"):
+        return f"interpret={int(bool(interp))} lowering={lowering}"
+
     methods = {
         name: _factor_update(name) for name in ("reference", "paper", "gemm")
     }
@@ -97,14 +106,15 @@ def run(csv_rows, *, ns=(512, 1024, 2048, 4096), ks=(16, 1), quick=False,
                 times[(name, n, k)] = dt
                 csv_rows.append(
                     (f"cholupdate/{name}/n{n}/k{k}", dt * 1e6,
-                     f"err={err:.2e}")
+                     f"err={err:.2e} {mode()}")
                 )
             # downdate error parity (paper fig 2/3 bottom panels)
             L2, V2 = make_problem(n, k, seed=n + k, downdate=True)
             out = methods["gemm"](L2, V2, -1)
             errd = float(ref.modify_error(out, L2, V2, sigma=-1))
             csv_rows.append(
-                (f"cholupdate/gemm_downdate/n{n}/k{k}", 0.0, f"err={errd:.2e}")
+                (f"cholupdate/gemm_downdate/n{n}/k{k}", 0.0,
+                 f"err={errd:.2e} {mode()}")
             )
 
     # Derived: scaling exponent for the gemm path at k=16 (expect ~2: O(kn^2))
@@ -114,7 +124,8 @@ def run(csv_rows, *, ns=(512, 1024, 2048, 4096), ks=(16, 1), quick=False,
             (n0, t0), (n1, t1) = pts[0], pts[-1]
             slope = np.log(t1 / t0) / np.log(n1 / n0)
             csv_rows.append(
-                (f"cholupdate/scaling_exponent/k{k}", 0.0, f"slope={slope:.2f}")
+                (f"cholupdate/scaling_exponent/k{k}", 0.0,
+                 f"slope={slope:.2f} {mode()}")
             )
     # Derived: panelled-vs-serial speedup (paper: ~7x at n=5000, k=16)
     for k in ks:
@@ -123,7 +134,7 @@ def run(csv_rows, *, ns=(512, 1024, 2048, 4096), ks=(16, 1), quick=False,
                 sp = times[("reference", n, k)] / times[("gemm", n, k)]
                 csv_rows.append(
                     (f"cholupdate/speedup_gemm_vs_serial/n{n}/k{k}", 0.0,
-                     f"speedup={sp:.2f}x")
+                     f"speedup={sp:.2f}x {mode()}")
                 )
     # Derived: rank-16 batching vs 16 sequential rank-1 (paper's k>1 motive)
     n = min(ns[-1], 1024)
@@ -141,14 +152,16 @@ def run(csv_rows, *, ns=(512, 1024, 2048, 4096), ks=(16, 1), quick=False,
     tseq, _ = time_call(seq_rank1, L, V, reps=2)
     csv_rows.append(
         (f"cholupdate/rank16_batching_gain/n{n}", t16 * 1e6,
-         f"vs_16x_rank1={tseq / t16:.2f}x")
+         f"vs_16x_rank1={tseq / t16:.2f}x {mode()}")
     )
 
     # --- fused single-launch pipeline vs the per-panel kernel cascade ------
-    # Interpret mode off-TPU: wall-clock is not TPU performance, but the
-    # launch-count column is exact and the timing ratio still shows the
-    # Python/dispatch overhead the fusion removes.
-    interpret = jax.default_backend() != "tpu"
+    # Interpret mode only when NO lowering compiles here: the portable
+    # lowering compiles on GPU too (ISSUE 7), so only pure-CPU hosts fall
+    # back to interpret — and the recorded interpret=/lowering= tokens let
+    # report.py footnote whichever happened. Wall-clock in interpret mode
+    # is dispatch-bound, but the launch-count column is exact either way.
+    interpret = backends.default_interpret(lowering="auto")
     fused_ns = (256,) if quick else (256, 512)
     kf = 16
     for n in fused_ns:
@@ -187,18 +200,41 @@ def run(csv_rows, *, ns=(512, 1024, 2048, 4096), ks=(16, 1), quick=False,
         gs_r = fused_k.grid_steps(n, panel_f, grid_mode="rect")
         csv_rows.append(
             (f"cholupdate/fused/n{n}/k{kf}", t_fused * 1e6,
-             f"err={err_f:.2e} launches=1")
+             f"err={err_f:.2e} launches=1 "
+             f"{mode(interpret, auto_lowering)}")
         )
         csv_rows.append(
             (f"cholupdate/fused_vs_cascade/n{n}/k{kf}", t_casc * 1e6,
              f"speedup={t_casc / t_fused:.2f}x "
              f"launches_cascade={lc_c} launches_2phase={lc_2} "
-             f"launch_reduction={lc_c}->{lc_f}")
+             f"launch_reduction={lc_c}->{lc_f} "
+             f"{mode(interpret, auto_lowering)}")
         )
         csv_rows.append(
             (f"cholupdate/fused_grid_squash/n{n}/k{kf}", t_rect * 1e6,
              f"grid_steps={gs_r}->{gs_i} "
-             f"rect_vs_indexed={t_rect / t_idx:.2f}x")
+             f"rect_vs_indexed={t_rect / t_idx:.2f}x "
+             f"{mode(interpret, auto_lowering)}")
+        )
+        # ISSUE 7: the two lowerings of the ONE fused kernel, timed through
+        # the same direct entry point. On real GPU hardware the portable
+        # row is the compiled single-launch path the tentpole adds; in
+        # interpret mode both are dispatch-bound (the tokens say which).
+        t_port, out_p = time_call(
+            lambda L, V: fused_k.chol_update_fused(
+                L, V, sigma=1, panel=panel_f, lowering="portable",
+                interpret=interpret
+            ), L, V, reps=2,
+        )
+        err_port = float(ref.modify_error(out_p, L, V, sigma=1))
+        csv_rows.append(
+            (f"cholupdate/fused_lowering/portable/n{n}/k{kf}", t_port * 1e6,
+             f"err={err_port:.2e} mosaic_vs_portable={t_idx / t_port:.2f}x "
+             f"launches=1 {mode(interpret, 'portable')}")
+        )
+        csv_rows.append(
+            (f"cholupdate/fused_lowering/mosaic/n{n}/k{kf}", t_idx * 1e6,
+             f"launches=1 {mode(interpret, 'mosaic')}")
         )
 
     # --- precision axis: storage dtype vs wall-clock AND bytes-per-update --
@@ -226,7 +262,8 @@ def run(csv_rows, *, ns=(512, 1024, 2048, 4096), ks=(16, 1), quick=False,
                 (f"cholupdate/precision/{backend}/{dtype}/n{prec_n}/k{kp}",
                  t_p * 1e6,
                  f"err={err_p:.2e} bytes_per_update={bytes_upd} "
-                 f"out_dtype={jnp.asarray(out_p).dtype}")
+                 f"out_dtype={jnp.asarray(out_p).dtype} "
+                 f"{mode(interpret, auto_lowering if backend == 'fused' else 'none')}")
             )
 
     # --- batched serving workload: B concurrent per-user updates -----------
@@ -258,6 +295,7 @@ def run(csv_rows, *, ns=(512, 1024, 2048, 4096), ks=(16, 1), quick=False,
     csv_rows.append(
         (f"cholupdate/batched_fused/B{Bsz}n{nb}k{kb}", t_bat * 1e6,
          f"err={err_b:.2e} per_update_us={t_bat / Bsz * 1e6:.1f} "
-         f"vs_loop_of_singles={t_loop / t_bat:.2f}x")
+         f"vs_loop_of_singles={t_loop / t_bat:.2f}x "
+         f"{mode(interpret, auto_lowering)}")
     )
     return csv_rows

@@ -102,12 +102,26 @@ def row_mode(row, rec):
     return "⚠ interpret" if interp else "compiled"
 
 
+def row_lowering(row, rec):
+    """Which fused-kernel lowering produced a row (ISSUE 7).
+
+    Per-row ``lowering=`` tokens win (rows that pin a lowering, e.g. the
+    fused_lowering comparison pair); otherwise the snapshot's top-level
+    ``lowering`` field (what resolve('auto') picked on that host); '—'
+    for records predating both. jnp-path rows record 'none' — they never
+    touch Pallas, so the column stays honest about which rows the
+    mosaic/portable split can even affect.
+    """
+    d = parse_derived(row.get("derived", ""))
+    return d.get("lowering", rec.get("lowering", "—"))
+
+
 def precision_table(rec):
     """The --dtype axis PR 3 added: per-storage-dtype rows of the
     cholupdate suite (previously ignored by this report)."""
     lines = [
-        "| backend | dtype | us/update | err | bytes/update | mode |",
-        "|---|---|---|---|---|---|",
+        "| backend | dtype | us/update | err | bytes/update | lowering | mode |",
+        "|---|---|---|---|---|---|---|",
     ]
     found = False
     for row in rec.get("rows", []):
@@ -119,7 +133,33 @@ def precision_table(rec):
         lines.append(
             f"| {parts[2]} | {parts[3]} | {row['us']:.1f} "
             f"| {d.get('err', '—')} | {d.get('bytes_per_update', '—')} "
-            f"| {row_mode(row, rec)} |"
+            f"| {row_lowering(row, rec)} | {row_mode(row, rec)} |"
+        )
+    if not found:
+        return None
+    return "\n".join(lines + ["", _interpret_note(rec)])
+
+
+def fused_lowering_table(rec):
+    """The ISSUE 7 mosaic-vs-portable comparison pair: the SAME fused
+    kernel body timed through both lowerings on the same problem sizes.
+    Only meaningful compiled (on TPU the portable path would be Triton-
+    less anyway; on GPU mosaic doesn't compile) — interpret rows are
+    flagged by the mode column like everywhere else."""
+    lines = [
+        "| row | us | err | mosaic/portable | lowering | mode |",
+        "|---|---|---|---|---|---|",
+    ]
+    found = False
+    for row in rec.get("rows", []):
+        if not row["name"].startswith("cholupdate/fused_lowering/"):
+            continue
+        found = True
+        d = parse_derived(row["derived"])
+        lines.append(
+            f"| {row['name']} | {row['us']:.1f} | {d.get('err', '—')} "
+            f"| {d.get('mosaic_vs_portable', '—')} "
+            f"| {row_lowering(row, rec)} | {row_mode(row, rec)} |"
         )
     if not found:
         return None
@@ -170,26 +210,43 @@ def distributed_table(rec):
     return "\n".join(lines + ["", _interpret_note(rec)])
 
 
+def _rec_origin(rec):
+    """Human tag for where a snapshot record ran (ISSUE 7 fields)."""
+    bits = [f"backend={rec['backend']}"]
+    if rec.get("device_kind"):
+        bits.append(f"device={rec['device_kind']}")
+    if rec.get("lowering"):
+        bits.append(f"lowering={rec['lowering']}")
+    return ", ".join(bits)
+
+
 def snapshot_sections():
     chol = load_snapshot("BENCH_cholupdate.json")
     for rec in reversed(chol):  # newest record that carries the dtype axis
         table = precision_table(rec)
         if table:
             print(f"\n### Precision axis ({rec['commit']}, "
-                  f"backend={rec['backend']}, dtypes={rec.get('dtypes')})\n")
+                  f"{_rec_origin(rec)}, dtypes={rec.get('dtypes')})\n")
+            print(table)
+            break
+    for rec in reversed(chol):  # newest record with the lowering pair
+        table = fused_lowering_table(rec)
+        if table:
+            print(f"\n### Fused lowerings: mosaic vs portable "
+                  f"({rec['commit']}, {_rec_origin(rec)})\n")
             print(table)
             break
     stream = load_snapshot("BENCH_stream.json")
     if stream:
         rec = stream[-1]
         print(f"\n### Streaming service ({rec['commit']}, "
-              f"backend={rec['backend']})\n")
+              f"{_rec_origin(rec)})\n")
         print(stream_table(rec))
     dist = load_snapshot("BENCH_distributed.json")
     if dist:
         rec = dist[-1]
         print(f"\n### Distributed / sharded fleets ({rec['commit']}, "
-              f"backend={rec['backend']})\n")
+              f"{_rec_origin(rec)})\n")
         print(distributed_table(rec))
 
 

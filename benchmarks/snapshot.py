@@ -3,8 +3,16 @@
 ``scripts/bench.sh`` runs the benchmark suites and appends ONE json record
 (line-delimited) per snapshot file:
 
-    {"ts": ..., "commit": ..., "backend": ..., "quick": ...,
+    {"ts": ..., "commit": ..., "backend": ..., "platform": ...,
+     "device_kind": ..., "lowering": ..., "quick": ...,
      "rows": [{"name": ..., "us": ..., "derived": ...}, ...]}
+
+The ``platform`` / ``device_kind`` / ``lowering`` triple (ISSUE 7) pins
+each record to the hardware and the fused-kernel lowering that produced
+it — ``resolve_lowering('auto')``: mosaic on TPU, portable (Triton) on
+GPU — so trajectories never silently mix numbers from different
+lowerings of the same kernel. Per-row ``interpret=``/``lowering=``
+tokens in ``derived`` refine this where a row pins its own mode.
 
 Suites map to snapshot files: the kernel/cholupdate/optimizer suites share
 ``benchmarks/results/BENCH_cholupdate.json``; the streaming-service suite
@@ -96,14 +104,29 @@ def main() -> None:
         else:
             fn(rows, quick=not args.full)
 
+    from repro.core import backends
+
     RESULTS.mkdir(parents=True, exist_ok=True)
     commit = _git_commit()
     ts = time.strftime("%Y-%m-%dT%H:%M:%S%z")
+    # ISSUE 7: record WHERE the numbers came from. ``platform`` is the jax
+    # backend, ``device_kind`` the concrete accelerator (e.g. "TPU v4" /
+    # "NVIDIA H100" / "cpu"), ``lowering`` what resolve('auto') picks there
+    # — two snapshots are only comparable when all three match, and the
+    # lowering field is what separates a mosaic trajectory from a portable
+    # one on the same problem sizes.
+    try:
+        device_kind = jax.devices()[0].device_kind
+    except Exception:
+        device_kind = "unknown"
     for outfile, rows in by_file.items():
         record = {
             "ts": ts,
             "commit": commit,
             "backend": jax.default_backend(),
+            "platform": jax.default_backend(),
+            "device_kind": device_kind,
+            "lowering": backends.resolve_lowering("auto"),
             "quick": not args.full,
             "suites": ",".join(suites_by_file[outfile]),
             "dtypes": list(dtypes),

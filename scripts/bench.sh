@@ -15,6 +15,12 @@
 # suite (device-scaling + sharded-fleet axis, DESIGN.md §10) to
 # BENCH_distributed.json; everything else shares BENCH_cholupdate.json.
 # Render all three with `python -m benchmarks.report`.
+#
+# Every record carries platform / device_kind / lowering (ISSUE 7): which
+# jax backend ran it, on what accelerator, and which fused-kernel lowering
+# resolve('auto') picked there (mosaic on TPU, portable/Triton on GPU).
+# Rows additionally tag interpret=0|1 and their own lowering= where they
+# pin one — compare trajectories only where these match.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

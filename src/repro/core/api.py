@@ -139,13 +139,15 @@ def chol_update(
       method: backend name or 'auto', see module docstring.
       panel: row-panel size for the blocked paths.
       interpret: force Pallas interpret mode (defaults to auto-detect per
-        kernel: the per-panel kernels compile on TPU and GPU, the fused
-        kernel compiles on TPU only — see ``backends.default_interpret``).
+        kernel and lowering: the per-panel kernels compile on TPU and GPU,
+        the fused kernel's mosaic lowering on TPU only and its portable
+        lowering on both — see ``backends.default_interpret``). An explicit
+        value, including ``False``, always wins over the auto-detect.
       precision: storage/accum dtype policy ('bf16', a ``Precision``, or
         None = legacy single-dtype behaviour). The result carries the
         storage dtype.
       **opts: backend-specific options (e.g. ``mesh=``/``axis=`` for
-        'sharded', ``panel_apply=`` for 'fused').
+        'sharded', ``panel_apply=``/``lowering=`` for 'fused').
 
     Returns:
       The modified upper-triangular factor.

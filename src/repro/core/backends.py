@@ -19,6 +19,7 @@ pure-JAX core carries no kernel dependencies until a kernel path runs.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
@@ -27,23 +28,89 @@ from repro.core.precision import Precision
 
 # Device kinds Pallas can lower kernels for: TPU (Mosaic) and GPU (Triton).
 # The paper's target hardware is the GPU — 'auto' routing must not treat
-# TPU as the only kernel-capable device. The fused kernel is the exception:
-# its PrefetchScalarGridSpec + pltpu.VMEM scratch are Mosaic-only, so on
-# GPU the Pallas path is the per-panel GEMM kernel (plain pallas_call +
-# BlockSpecs, Triton-lowerable).
+# TPU as the only kernel-capable device. The fused kernel has TWO lowerings
+# of one kernel body (DESIGN.md §5): the Mosaic spec (scalar-prefetch index
+# table + pltpu.VMEM scratch) where it wins, and a portable spec (plain
+# pl.GridSpec, chain-walk state in loop carries) that Triton can compile —
+# so GPU kinds take the single-launch path too.
 PALLAS_DEVICE_KINDS = ("tpu", "gpu", "cuda", "rocm")
 MOSAIC_DEVICE_KINDS = ("tpu",)
+PORTABLE_DEVICE_KINDS = ("gpu", "cuda", "rocm")
+
+#: Valid ``lowering=`` values for the fused kernel family ('auto' and None
+#: both mean "resolve by device kind").
+LOWERINGS = ("auto", "mosaic", "portable")
+
+# Environment overrides, used by the CI routing job (test-gpu-routing):
+# REPRO_FAKE_DEVICE_KIND makes every routing heuristic see a chosen device
+# kind without real hardware; REPRO_FORCE_INTERPRET=1 pins the interpret
+# auto-detect to True so kernels selected for that fake kind still execute
+# (in interpret mode) on the host actually running the suite. Explicit
+# ``interpret=`` arguments are never touched by either.
+FAKE_DEVICE_KIND_ENV = "REPRO_FAKE_DEVICE_KIND"
+FORCE_INTERPRET_ENV = "REPRO_FORCE_INTERPRET"
 
 
-def default_interpret(*, mosaic_only: bool = False) -> bool:
+def device_kind() -> str:
+    """The device kind every routing heuristic keys on (lowercase).
+
+    Reads ``REPRO_FAKE_DEVICE_KIND`` first so a whole test run can exercise
+    the GPU routing path from a CPU host, then falls back to the real
+    ``jax.default_backend()``.
+    """
+    fake = os.environ.get(FAKE_DEVICE_KIND_ENV)
+    if fake:
+        return fake.lower()
+    return jax.default_backend().lower()
+
+
+_current_device_kind = device_kind  # alias: params named device_kind shadow
+
+
+def resolve_lowering(lowering: Optional[str] = None, *,
+                     device_kind: Optional[str] = None) -> str:
+    """Map a ``lowering`` request (possibly None/'auto') to a concrete one.
+
+    'mosaic' keeps the PrefetchScalarGridSpec + pltpu.VMEM scratch spec —
+    the tuned TPU path (and the interpret-mode default off-GPU). 'portable'
+    is the plain-GridSpec spec whose chain-walk state lives in loop carries,
+    which Triton can lower — the auto choice on gpu/cuda/rocm kinds.
+    """
+    if lowering in ("mosaic", "portable"):
+        return lowering
+    if lowering not in (None, "auto"):
+        raise ValueError(
+            f"lowering must be one of {LOWERINGS}, got {lowering!r}")
+    kind = (device_kind or _current_device_kind()).lower()
+    return "portable" if kind in PORTABLE_DEVICE_KINDS else "mosaic"
+
+
+def default_interpret(*, mosaic_only: bool = False,
+                      lowering: Optional[str] = None) -> bool:
     """Interpret-mode auto-detect, shared by every kernel entry point.
 
-    ``mosaic_only=True`` is for kernels using TPU-specific Pallas features
-    (the fused kernel): compile on TPU, interpret elsewhere. The default
-    covers the per-panel kernels, which also compile on GPU via Triton.
+    Callers pass this ONLY when no explicit ``interpret=`` argument was
+    given — an explicit argument (including ``False``) always wins over
+    this heuristic (see tests/test_fused.py's regression).
+
+    ``lowering`` selects the fused-kernel policy: the 'mosaic' lowering
+    compiles on TPU only; the 'portable' lowering also compiles on GPU via
+    Triton (so GPU kinds no longer hard-force interpret mode for the fused
+    kernel). ``mosaic_only=True`` is the legacy spelling of
+    ``lowering='mosaic'``. The default covers the per-panel kernels, which
+    compile on both TPU and GPU.
+
+    ``REPRO_FORCE_INTERPRET=1`` pins the result to True (the CI fake-GPU
+    routing job: routing resolves for 'gpu', execution stays interpretable
+    on the CPU host actually running it).
     """
+    if os.environ.get(FORCE_INTERPRET_ENV, "") not in ("", "0"):
+        return True
+    kind = device_kind()
+    if lowering is not None:
+        mosaic_only = resolve_lowering(lowering, device_kind=kind) == "mosaic"
     kinds = MOSAIC_DEVICE_KINDS if mosaic_only else PALLAS_DEVICE_KINDS
-    return jax.default_backend().lower() not in kinds
+    return kind not in kinds
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,26 +179,23 @@ def resolve(
 ) -> str:
     """Map ``method`` (possibly 'auto') to a concrete backend name.
 
-    The 'auto' heuristic prefers a Pallas kernel whenever a Pallas-capable
-    device is present or interpret mode was explicitly requested: the
-    single-launch fused kernel on TPU (and under interpret — its
-    PrefetchScalarGridSpec/pltpu scratch are Mosaic-only), the per-panel
-    GEMM kernel on GPU (Triton lowering; the paper's actual target
-    hardware, which previously fell all the way back to the jnp gemm path
-    and never launched a kernel). Otherwise the pure-JAX paths: the serial
-    oracle for problems under two panels (where panelling buys nothing)
-    and the transform-GEMM driver beyond.
+    The 'auto' heuristic prefers the single-launch fused kernel on EVERY
+    Pallas-capable device (or under explicitly requested interpret mode):
+    the Mosaic lowering on TPU, the portable lowering on gpu/cuda/rocm —
+    the paper's actual target hardware, which used to route to the
+    O(n/panel)-launch per-panel GEMM cascade because the fused grid spec
+    was Mosaic-only (see ``resolve_lowering``). Otherwise the pure-JAX
+    paths: the serial oracle for problems under two panels (where
+    panelling buys nothing) and the transform-GEMM driver beyond.
     """
     if method != "auto":
         get(method)  # validate
         return method
     if device_kind is None:
-        device_kind = jax.default_backend()
+        device_kind = _current_device_kind()
     device_kind = device_kind.lower()
-    if device_kind in MOSAIC_DEVICE_KINDS or interpret:
+    if device_kind in PALLAS_DEVICE_KINDS or interpret:
         return "fused"
-    if device_kind in PALLAS_DEVICE_KINDS:
-        return "pallas_gemm"
     if n < 2 * panel:
         return "reference"
     return "gemm"
@@ -208,7 +272,9 @@ def _pallas_gemm(L, V, *, sigma, panel, interpret, precision=None, **opts):
 
 
 @register("fused", kind="pallas",
-          description="single-launch pipelined Pallas kernel (DESIGN.md §5)")
+          description="single-launch pipelined Pallas kernel, one body with "
+                      "two lowerings: lowering='auto'|'mosaic'|'portable' "
+                      "(DESIGN.md §5)")
 def _fused(L, V, *, sigma, panel, interpret, precision=None, **opts):
     from repro.kernels import fused as kernel_fused
 

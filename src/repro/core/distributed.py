@@ -88,6 +88,7 @@ def chol_update_sharded(
     axis: AxisNames = "model",
     panel: int = 256,
     strategy: str = "fused",
+    lowering: str = "auto",
     interpret: Optional[bool] = None,
     precision: Optional[Precision] = None,
 ):
@@ -104,8 +105,13 @@ def chol_update_sharded(
       panel: row-panel size; must divide the per-device column count.
       strategy: 'fused' (one Pallas launch per shard, default), 'gemm'
         (per-panel transform GEMM) or 'paper' (element-wise).
+      lowering: per-shard kernel lowering for the fused strategy —
+        'mosaic', 'portable', or 'auto' (resolve by device kind, see
+        ``backends.resolve_lowering``). Ignored by the jnp strategies.
       interpret: Pallas interpret mode for the fused strategy (default:
-        auto — True off-TPU). Ignored by the jnp strategies.
+        auto per the resolved lowering — the portable spec also compiles
+        on GPU). An explicit value always wins. Ignored by the jnp
+        strategies.
       precision: storage/accum policy (DESIGN.md §8). The shard tiles, the
         running V^T, and the per-panel psum-gathers move in the storage
         dtype (halving collective + HBM bytes under 'bf16'); the gathered
@@ -148,12 +154,14 @@ def chol_update_sharded(
         )
     if n % panel:
         raise ValueError(f"n={n} must be a multiple of panel={panel}")
-    if interpret is None:
-        from repro.core.backends import default_interpret
+    from repro.core.backends import default_interpret, resolve_lowering
 
-        # The fused strategy's per-shard kernel is Mosaic-only (like the
-        # fused single-device kernel): compile on TPU, interpret elsewhere.
-        interpret = default_interpret(mosaic_only=True)
+    lowering = resolve_lowering(lowering)
+    if interpret is None:
+        # Lowering-aware auto-detect (like the fused single-device kernel):
+        # the mosaic per-shard spec compiles on TPU only; the portable spec
+        # also on GPU. An explicit interpret= argument always wins.
+        interpret = default_interpret(lowering=lowering)
     if batched:
         vt = jnp.swapaxes(V, -1, -2)  # (B, k, n)
         col_spec = P(None, None, axes)
@@ -164,7 +172,7 @@ def chol_update_sharded(
         fn = functools.partial(
             _sharded_update_fused, sigma=sigma, axes=axes, mesh=mesh,
             panel=panel, w_loc=w_loc, interpret=bool(interpret),
-            accum_dtype=accum_dtype,
+            accum_dtype=accum_dtype, lowering=lowering,
         )
         wrap = shard_map_norep  # pallas_call has no replication rule
     else:
@@ -245,7 +253,7 @@ def _chain_phase(L_loc, vt_loc, *, sigma, axes, panel, w_loc, me, gcol,
 
 
 def _sharded_update_fused(L_loc, vt_loc, *, sigma, axes, mesh, panel, w_loc,
-                          interpret, accum_dtype=None):
+                          interpret, accum_dtype=None, lowering="mosaic"):
     from repro.kernels import sharded as sharded_k
 
     me = _combined_axis_index(axes, mesh)
@@ -265,7 +273,7 @@ def _sharded_update_fused(L_loc, vt_loc, *, sigma, axes, mesh, panel, w_loc,
     return sharded_k.panel_apply_sharded(
         L_loc, T_stack, D_stack, vt_stack,
         tile_off=me * (w_loc // panel), panel=panel, interpret=interpret,
-        accum_dtype=accum_dtype,
+        accum_dtype=accum_dtype, lowering=lowering,
     )
 
 

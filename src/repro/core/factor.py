@@ -67,6 +67,9 @@ class CholFactor:
         Valid for both single ``(n, n)`` and batched ``(B, n, n)`` data —
         the batched-sharded composition routes through the fleet-native
         distributed driver.
+      lowering: fused-kernel lowering for the 'fused'/'sharded' backends —
+        'mosaic', 'portable', or None/'auto' (resolve per device kind,
+        DESIGN.md §5). Ignored by the jnp backends.
     """
 
     data: jax.Array
@@ -76,6 +79,7 @@ class CholFactor:
     precision: Optional[Precision] = None
     mesh: Optional[object] = None
     axis: Axis = "model"
+    lowering: Optional[str] = None
 
     def __post_init__(self):
         # Canonicalise string/dtype specs once, so the static aux is a
@@ -85,7 +89,7 @@ class CholFactor:
     # -- pytree protocol ----------------------------------------------------
     def tree_flatten(self):
         aux = (self.panel, self.backend, self.interpret, self.precision,
-               self.mesh, self.axis)
+               self.mesh, self.axis, self.lowering)
         return (self.data,), aux
 
     @classmethod
@@ -142,6 +146,11 @@ class CholFactor:
                 raise ValueError("sharded backend requires a mesh binding "
                                  "(CholFactor(..., mesh=, axis=))")
             opts = {"mesh": self.mesh, "axis": self.axis}
+        if self.lowering is not None and self.backend in (
+                "auto", "fused", "sharded"):
+            # Only the fused-kernel family understands the opt; 'auto' may
+            # resolve to a jnp backend, which ignores extra opts by design.
+            opts["lowering"] = self.lowering
         if self.batched:
             new = api.chol_update_batched(
                 self.data, V, sigma=sigma, method=self.backend,

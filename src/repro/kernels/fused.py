@@ -9,8 +9,31 @@ with the rotation state ``(c, s)`` / the transform ``T`` and the running
 ``V^T`` round-tripping through HBM (and Python) between launches.
 
 This module collapses the whole cascade into ONE ``pallas_call`` whose grid
-*is* the dependency chain. TPU grid steps execute sequentially (grid
-dimensions are "arbitrary", not "parallel", by default), so the chain
+*is* the dependency chain. It is ONE kernel (one chain walk, one set of
+value-level math helpers shared with the per-panel kernels) with TWO
+lowerings:
+
+* ``lowering='mosaic'`` — the TPU spec: TPU grid steps execute sequentially
+  (grid dimensions are "arbitrary", not "parallel", by default), so the
+  chain maps onto a 1-D grid over a ``PrefetchScalarGridSpec`` index table,
+  with the chain-walk state (running ``V^T``, parked ``T``/``(c, s)``)
+  parked in ``pltpu.VMEM`` scratch between grid steps.
+* ``lowering='portable'`` — the same chain as a plain ``pl.GridSpec``
+  whose single grid step walks the squashed 1-D step table with an
+  in-kernel ``fori_loop``; the chain-walk state lives in loop *carries*
+  (registers/VREGs) instead of a backend-specific scratch memory space, so
+  Triton can compile it and GPU takes the single-launch path too. No
+  scalar prefetch, no pltpu scratch, no cross-grid-step state — nothing
+  Mosaic-only. (A multi-step grid is NOT portable: Triton grid programs
+  run concurrently with no cross-step ordering or persistent scratch, so
+  the squash moves the chain INSIDE the one step.)
+
+``backends.resolve_lowering`` picks per device kind ('mosaic' on TPU and
+under off-accelerator interpret, 'portable' on gpu/cuda/rocm);
+``backends.resolve('auto')`` now routes every Pallas-capable device kind to
+this kernel.
+
+The Mosaic chain
 
     diag block 0 -> panel 0 -> diag block 1 -> panel 1 -> ...
 
@@ -62,6 +85,17 @@ from repro.core.precision import Precision
 from repro.kernels.cholupdate import apply_rotations, diag_recurrence
 
 GRID_MODES = ("indexed", "rect")
+
+# Trace-time instrumentation: pallas_call constructions per lowering. The
+# per-lowering analogue of ``repro.kernels.sharded.launches_traced`` — tests
+# assert the portable path really traced a portable kernel (and exactly one
+# per rank-k update).
+_LOWERINGS_TRACED = {"mosaic": 0, "portable": 0}
+
+
+def lowerings_traced() -> dict:
+    """Cumulative pallas_call constructions keyed by lowering name."""
+    return dict(_LOWERINGS_TRACED)
 
 
 def _fused_body(p, t, vt_in, l_ref, l_out, vt_s, t_s, c_s, s_s, *,
@@ -153,6 +187,97 @@ def _rect_kernel(vt_in, l_ref, l_out, vt_s, t_s, c_s, s_s, *,
                 accum_dtype=accum_dtype)
 
 
+def _portable_kernel(p_tab, t_tab, v_tab, vt_in, l_ref, l_out, *,
+                     sigma, panel, k, panel_apply, accum_dtype,
+                     has_invalid):
+    """Portable lowering: the whole chain in ONE grid step, state in carries.
+
+    Triton grid programs execute concurrently — there is no cross-step
+    ordering and no persistent scratch — so the dependency chain cannot
+    span grid steps the way the Mosaic lowering's does. Instead the single
+    step walks the squashed 1-D step table with an in-kernel ``fori_loop``
+    whose carry IS the chain-walk state: the running ``V^T`` plus the
+    parked transform ``T`` and rotation ``(c, s)`` of the current grid row.
+    The same precision split as the Mosaic body applies: the ``V^T`` carry
+    and the L tiles move in the storage dtype, ``T``/``(c, s)`` and all
+    computation in the accumulation dtype.
+
+    Tile reads always come from ``l_ref`` (original data — every chain tile
+    is written exactly once, by its own step, and read only by that step),
+    tile writes go to ``l_out``, which starts as a copy of the input so
+    off-chain (strictly-lower / padded) regions pass through unchanged.
+
+    ``has_invalid`` (static) marks tables with clamped no-op entries (the
+    'rect' grid mode): those steps skip the store and keep the old carry.
+    """
+    l_out[...] = l_ref[...]
+    state_dtype = accum_dtype or l_ref.dtype
+    pk = panel + k
+    n_steps = p_tab.shape[0]
+
+    def _diag_step(tile, slab, T, c, s):
+        del T, c, s
+        D_new, c_new, s_new, T_new = diag_recurrence(
+            tile, slab, sigma=sigma, rows=panel, k=k,
+            accum_dtype=accum_dtype)
+        # The recurrence annihilates this V^T slab.
+        return (D_new.astype(l_out.dtype), jnp.zeros_like(slab),
+                T_new.astype(state_dtype), c_new.astype(state_dtype),
+                s_new.astype(state_dtype))
+
+    def _apply_step(tile, slab, T, c, s):
+        R, vtt = tile, slab
+        if panel_apply == "gemm":
+            acc_t = accum_dtype or jnp.float32
+            if R.dtype != T.dtype:
+                # bf16 tiles under fp32 transform: upcast in VREGs; the HBM
+                # tile and the V^T carry stay narrow.
+                R = R.astype(T.dtype)
+                vtt = vtt.astype(T.dtype)
+            t_rr, t_rv = T[:panel, :panel], T[:panel, panel:]
+            t_vr, t_vv = T[panel:, :panel], T[panel:, panel:]
+            R_new = jnp.dot(t_rr, R, preferred_element_type=acc_t)
+            R_new += jnp.dot(t_rv, vtt, preferred_element_type=acc_t)
+            vt_new = jnp.dot(t_vr, R, preferred_element_type=acc_t)
+            vt_new += jnp.dot(t_vv, vtt, preferred_element_type=acc_t)
+        else:
+            R_new, vt_new = apply_rotations(
+                R, vtt, c, s, sigma=sigma, rows=panel, k=k,
+                accum_dtype=accum_dtype)
+        return (R_new.astype(l_out.dtype), vt_new.astype(slab.dtype),
+                T, c, s)
+
+    def step(i, carry):
+        vt, T, c, s = carry
+        p, t = p_tab[i], t_tab[i]
+        r0, c0_ = p * panel, t * panel
+        tile = l_ref[pl.dslice(r0, panel), pl.dslice(c0_, panel)]
+        slab = jax.lax.dynamic_slice_in_dim(vt, c0_, panel, axis=1)
+        out_tile, slab_new, T_new, c_new, s_new = jax.lax.cond(
+            t == p, _diag_step, _apply_step, tile, slab, T, c, s)
+        if has_invalid:
+            valid = v_tab[i] > 0
+
+            @pl.when(valid)
+            def _store():
+                l_out[pl.dslice(r0, panel), pl.dslice(c0_, panel)] = out_tile
+
+            keep = lambda new, old: jnp.where(valid, new, old)
+        else:
+            l_out[pl.dslice(r0, panel), pl.dslice(c0_, panel)] = out_tile
+            keep = lambda new, old: new
+        vt = keep(jax.lax.dynamic_update_slice_in_dim(
+            vt, slab_new, c0_, axis=1), vt)
+        return (vt, keep(T_new, T), keep(c_new, c), keep(s_new, s))
+
+    vt0 = vt_in[...]
+    carry0 = (vt0,
+              jnp.zeros((pk, pk), state_dtype),
+              jnp.zeros((panel, k), state_dtype),
+              jnp.zeros((panel, k), state_dtype))
+    jax.lax.fori_loop(0, n_steps, step, carry0)
+
+
 @functools.lru_cache(maxsize=None)
 def _pair_tables(n_tiles: int):
     """Static row-major upper-triangular (p, t) index tables — the chain.
@@ -164,18 +289,69 @@ def _pair_tables(n_tiles: int):
     return np.asarray(ps, np.int32), np.asarray(ts, np.int32)
 
 
+@functools.lru_cache(maxsize=None)
+def _chain_tables(n_tiles: int, grid_mode: str):
+    """(p, t, valid) step tables for the portable in-kernel chain walk.
+
+    'indexed' squashes to exactly the nP(nP+1)/2 chain steps (all valid);
+    'rect' keeps the rectangular nP² step count with out-of-range steps
+    clamped to the trailing tile and marked invalid — the same no-op
+    accounting as the Mosaic rect grid, as loop iterations instead of
+    empty kernel invocations.
+    """
+    if grid_mode == "indexed":
+        ps, ts = _pair_tables(n_tiles)
+        valid = np.ones_like(ps)
+    else:
+        ps = np.repeat(np.arange(n_tiles, dtype=np.int32), n_tiles)
+        ts = ps + np.tile(np.arange(n_tiles, dtype=np.int32), n_tiles)
+        valid = (ts < n_tiles).astype(np.int32)
+        ts = np.minimum(ts, n_tiles - 1)
+    return ps, ts, np.asarray(valid, np.int32)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("sigma", "panel", "panel_apply", "grid_mode", "interpret",
-                     "accum_dtype"),
+                     "accum_dtype", "lowering"),
 )
 def _fused_call(L, vt, *, sigma, panel, panel_apply, grid_mode, interpret,
-                accum_dtype=None):
+                accum_dtype=None, lowering="mosaic"):
     n_pad = L.shape[0]
     k = vt.shape[0]
     n_tiles = n_pad // panel
     pk = panel + k
     state_dtype = accum_dtype or L.dtype
+    if lowering == "portable":
+        # ONE grid step; the chain walk is an in-kernel fori_loop over the
+        # squashed step table, state in loop carries — nothing Mosaic-only.
+        p_tab, t_tab, v_tab = _chain_tables(n_tiles, grid_mode)
+        n_steps = int(p_tab.shape[0])
+        grid_spec = pl.GridSpec(
+            grid=(1,),
+            in_specs=[
+                pl.BlockSpec((n_steps,), lambda i: (0,)),
+                pl.BlockSpec((n_steps,), lambda i: (0,)),
+                pl.BlockSpec((n_steps,), lambda i: (0,)),
+                pl.BlockSpec((k, n_pad), lambda i: (0, 0)),
+                pl.BlockSpec((n_pad, n_pad), lambda i: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((n_pad, n_pad), lambda i: (0, 0)),
+        )
+        _LOWERINGS_TRACED["portable"] += 1
+        out = pl.pallas_call(
+            functools.partial(
+                _portable_kernel, sigma=sigma, panel=panel, k=k,
+                panel_apply=panel_apply, accum_dtype=accum_dtype,
+                has_invalid=(grid_mode == "rect")),
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((n_pad, n_pad), L.dtype),
+            interpret=interpret,
+        )(jnp.asarray(p_tab), jnp.asarray(t_tab), jnp.asarray(v_tab), vt, L)
+        return jnp.triu(out)
+    if lowering != "mosaic":
+        raise ValueError(
+            f"lowering must be 'mosaic' or 'portable' here, got {lowering!r}")
     scratch_shapes = [
         # The running V^T carries the STORAGE dtype — it is panel traffic,
         # the bandwidth-bound quantity; the parked rotation state carries
@@ -203,6 +379,7 @@ def _fused_call(L, vt, *, sigma, panel, panel_apply, grid_mode, interpret,
                                    lambda i, pt, tt: (pt[i], tt[i])),
             scratch_shapes=scratch_shapes,
         )
+        _LOWERINGS_TRACED["mosaic"] += 1
         out = pl.pallas_call(
             functools.partial(_indexed_kernel, **kw),
             grid_spec=grid_spec,
@@ -218,6 +395,7 @@ def _fused_call(L, vt, *, sigma, panel, panel_apply, grid_mode, interpret,
             # refetches nor reflushes, and the kernel body skips them.
             return (p, jnp.minimum(p + j, last))
 
+        _LOWERINGS_TRACED["mosaic"] += 1
         out = pl.pallas_call(
             functools.partial(_rect_kernel, n_tiles=n_tiles, **kw),
             grid=(n_tiles, n_tiles),
@@ -243,6 +421,7 @@ def chol_update_fused(
     panel: int = 256,
     panel_apply: str = "gemm",
     grid_mode: str = "indexed",
+    lowering: str = "auto",
     interpret=None,
     precision=None,
 ):
@@ -257,15 +436,22 @@ def chol_update_fused(
         paper's element-wise rotation chain, using the parked (c, s)).
       grid_mode: 'indexed' (1-D grid over a scalar-prefetch index table of
         the nP(nP+1)/2 chain steps, default) or 'rect' (the clamped
-        rectangular (nP, nP) grid, kept for comparison).
-      interpret: force Pallas interpret mode (default: auto — True anywhere
-        but TPU: this kernel's PrefetchScalarGridSpec + pltpu.VMEM scratch
-        are Mosaic-only, so on GPU prefer the per-panel kernels, which
-        Triton can compile — ``backends.resolve('auto')`` does exactly that).
+        rectangular (nP, nP) grid, kept for comparison). Both modes exist
+        under both lowerings: the portable lowering walks the same tables
+        as loop steps instead of grid steps.
+      lowering: 'mosaic' (PrefetchScalarGridSpec + pltpu.VMEM scratch, the
+        TPU spec), 'portable' (plain pl.GridSpec, chain state in loop
+        carries — compiles under Triton), or 'auto' (default: resolve by
+        device kind via ``backends.resolve_lowering`` — 'portable' on
+        gpu/cuda/rocm, 'mosaic' elsewhere).
+      interpret: force Pallas interpret mode. ``None`` (the default) auto-
+        detects per the RESOLVED lowering: the mosaic spec compiles on TPU
+        only, the portable spec also on GPU. An explicit value — including
+        ``False`` — always wins over the auto-detect.
       precision: storage/accum policy (``Precision``, 'bf16', or None).
-        Under 'bf16' the L-tiles and the running V^T scratch are bfloat16
-        (halving the per-tile HBM bytes of this bandwidth-bound kernel)
-        while the diagonal recurrence, (c, s), and T stay fp32.
+        Under 'bf16' the L-tiles and the running V^T (scratch or carry) are
+        bfloat16 (halving the per-tile HBM bytes of this bandwidth-bound
+        kernel) while the diagonal recurrence, (c, s), and T stay fp32.
 
     Returns:
       The updated upper-triangular factor, same shape as ``L``, in the
@@ -277,10 +463,11 @@ def chol_update_fused(
         raise ValueError(f"panel_apply must be 'gemm' or 'paper', got {panel_apply!r}")
     if grid_mode not in GRID_MODES:
         raise ValueError(f"grid_mode must be one of {GRID_MODES}, got {grid_mode!r}")
-    if interpret is None:
-        from repro.core.backends import default_interpret
+    from repro.core.backends import default_interpret, resolve_lowering
 
-        interpret = default_interpret(mosaic_only=True)
+    lowering = resolve_lowering(lowering)
+    if interpret is None:
+        interpret = default_interpret(lowering=lowering)
     precision = Precision.parse(precision)
     accum_dtype = None
     if precision is not None:
@@ -302,6 +489,7 @@ def chol_update_fused(
         grid_mode=grid_mode,
         interpret=bool(interpret),
         accum_dtype=accum_dtype,
+        lowering=lowering,
     )
     return out[:n, :n]
 

@@ -19,10 +19,13 @@ update — one launch per shard per rank-k update, against the per-panel
 driver's launch-per-panel dispatch pattern. The grid is ``(n_panels,
 local_tiles)``; which branch a step takes (transform / diagonal writeback /
 zero fill of the strictly-lower tiles) depends on the device's global tile
-offset, fed in through ``PrefetchScalarGridSpec`` so the comparison against
-the scalar-prefetched offset is available to every grid step without an
-HBM round-trip. The chain-phase products ride as VMEM operands indexed by
-the grid's panel coordinate.
+offset, fed in through ``PrefetchScalarGridSpec`` (the Mosaic lowering) so
+the comparison against the scalar-prefetched offset is available to every
+grid step without an HBM round-trip — or, under ``lowering='portable'``,
+as a plain ``(1,)`` operand in a ``pl.GridSpec`` Triton can compile; the
+tiles are independent, so the multi-step grid is parallel-safe and GPU
+keeps the same one launch per shard. The chain-phase products ride as VMEM
+operands indexed by the grid's panel coordinate.
 
 **Batched fleets (DESIGN.md §10).** A ``(B, n, w_loc)`` shard of a stacked
 fleet folds the batch into the SAME launch: the grid becomes
@@ -108,7 +111,8 @@ def _panel_kernel(off_ref, t_ref, d_ref, vt_ref, l_ref, l_out, *, panel,
 
 
 def panel_apply_sharded(L_loc, T_stack, D_stack, vt_stack, *, tile_off,
-                        panel: int, interpret: bool, accum_dtype=None):
+                        panel: int, interpret: bool, accum_dtype=None,
+                        lowering: str = "mosaic"):
     """Apply a whole update's panel phase to one column shard, one launch.
 
     Args:
@@ -127,45 +131,71 @@ def panel_apply_sharded(L_loc, T_stack, D_stack, vt_stack, *, tile_off,
       interpret: Pallas interpret mode.
       accum_dtype: GEMM accumulation dtype (None = fp32) — the precision
         policy's accum, honored here exactly as in the chain phase.
+      lowering: 'mosaic' (scalar-prefetched tile offset via
+        PrefetchScalarGridSpec) or 'portable' (plain pl.GridSpec; the
+        offset rides as a regular (1,) operand). Unlike the fused chain,
+        the panel-phase tiles are INDEPENDENT — all sequential coupling is
+        in the chain-phase operands — so the multi-step grid is safe under
+        Triton's concurrent program execution and the portable variant
+        keeps the same grid shape and the same ONE launch per shard.
 
     Returns:
       The fully updated column shard, same shape as ``L_loc``.
     """
     global _LAUNCHES_TRACED
+    if lowering not in ("mosaic", "portable"):
+        raise ValueError(
+            f"lowering must be 'mosaic' or 'portable', got {lowering!r}")
     batched = L_loc.ndim == 3
     n, w_loc = L_loc.shape[-2], L_loc.shape[-1]
     n_panels, pk = T_stack.shape[-3], T_stack.shape[-1]
     k = vt_stack.shape[-2]
     nt_loc = w_loc // panel
+    portable = lowering == "portable"
     if batched:
         B = L_loc.shape[0]
-        grid_spec = pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=(B, n_panels, nt_loc),
-            in_specs=[
-                pl.BlockSpec((1, 1, pk, pk), lambda b, p, t, off: (b, p, 0, 0)),
-                pl.BlockSpec((1, 1, panel, panel),
-                             lambda b, p, t, off: (b, p, 0, 0)),
-                pl.BlockSpec((1, 1, k, panel), lambda b, p, t, off: (b, p, 0, t)),
-                pl.BlockSpec((1, panel, panel), lambda b, p, t, off: (b, p, t)),
-            ],
-            out_specs=pl.BlockSpec((1, panel, panel),
-                                   lambda b, p, t, off: (b, p, t)),
-        )
+        grid = (B, n_panels, nt_loc)
+        in_specs = [
+            pl.BlockSpec((1, 1, pk, pk), lambda b, p, t: (b, p, 0, 0)),
+            pl.BlockSpec((1, 1, panel, panel), lambda b, p, t: (b, p, 0, 0)),
+            pl.BlockSpec((1, 1, k, panel), lambda b, p, t: (b, p, 0, t)),
+            pl.BlockSpec((1, panel, panel), lambda b, p, t: (b, p, t)),
+        ]
+        out_specs = pl.BlockSpec((1, panel, panel), lambda b, p, t: (b, p, t))
         out_shape = jax.ShapeDtypeStruct((B, n, w_loc), L_loc.dtype)
     else:
+        grid = (n_panels, nt_loc)
+        in_specs = [
+            pl.BlockSpec((1, pk, pk), lambda p, t: (p, 0, 0)),
+            pl.BlockSpec((1, panel, panel), lambda p, t: (p, 0, 0)),
+            pl.BlockSpec((1, k, panel), lambda p, t: (p, 0, t)),
+            pl.BlockSpec((panel, panel), lambda p, t: (p, t)),
+        ]
+        out_specs = pl.BlockSpec((panel, panel), lambda p, t: (p, t))
+        out_shape = jax.ShapeDtypeStruct((n, w_loc), L_loc.dtype)
+    if portable:
+        # The tile offset becomes a plain leading operand; its block spec
+        # pins the whole (1,) array into every grid step.
+        off_spec = pl.BlockSpec((1,), (lambda b, p, t: (0,)) if batched
+                                else (lambda p, t: (0,)))
+        grid_spec = pl.GridSpec(grid=grid, in_specs=[off_spec] + in_specs,
+                                out_specs=out_specs)
+    else:
+        # Mosaic: scalar-prefetch the offset; index maps gain the trailing
+        # prefetched-ref argument (ignored — no tile indexing depends on it).
+        def _drop_off(fn):
+            return lambda *args: fn(*args[:-1])
+
+        in_specs = [pl.BlockSpec(s.block_shape, _drop_off(s.index_map))
+                    for s in in_specs]
+        out_specs = pl.BlockSpec(out_specs.block_shape,
+                                 _drop_off(out_specs.index_map))
         grid_spec = pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
-            grid=(n_panels, nt_loc),
-            in_specs=[
-                pl.BlockSpec((1, pk, pk), lambda p, t, off: (p, 0, 0)),
-                pl.BlockSpec((1, panel, panel), lambda p, t, off: (p, 0, 0)),
-                pl.BlockSpec((1, k, panel), lambda p, t, off: (p, 0, t)),
-                pl.BlockSpec((panel, panel), lambda p, t, off: (p, t)),
-            ],
-            out_specs=pl.BlockSpec((panel, panel), lambda p, t, off: (p, t)),
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_specs,
         )
-        out_shape = jax.ShapeDtypeStruct((n, w_loc), L_loc.dtype)
     _LAUNCHES_TRACED += 1
     return pl.pallas_call(
         functools.partial(_panel_kernel, panel=panel,

@@ -93,6 +93,9 @@ class WarmupReport:
       rungs: ladder rungs covered.
       widths: width buckets covered.
       seconds: wall-clock spent lowering + compiling.
+      lowering: the fused-kernel lowering the compiled executables baked in
+        ('mosaic'/'portable') — resolved per device kind at warmup time
+        (DESIGN.md §5), so a GPU-kind warmup compiles the portable spec.
     """
 
     compiled: int = 0
@@ -100,6 +103,7 @@ class WarmupReport:
     rungs: Tuple[int, ...] = ()
     widths: Tuple[int, ...] = ()
     seconds: float = 0.0
+    lowering: str = "mosaic"
 
 
 def _aval(shape, dtype, sharding=None):
@@ -135,7 +139,13 @@ def warmup_store(store: FactorStore, *,
     sharding = (fleet_sharding(store._mesh, store._axis)
                 if store._mesh is not None else None)
     steps = store.steps
-    report = WarmupReport(rungs=tuple(rungs), widths=tuple(widths))
+    # The step traces resolve the fused lowering per device kind at trace
+    # time, so the executables compiled here bake it in; record which one.
+    from repro.core import backends
+
+    report = WarmupReport(rungs=tuple(rungs), widths=tuple(widths),
+                          lowering=backends.resolve_lowering(
+                              getattr(store.factor, "lowering", None)))
     t0 = time.perf_counter()
 
     def build(name, avals):

@@ -30,13 +30,18 @@ def fake_device_kind(monkeypatch):
             fake_device_kind("tpu")
             assert backends.resolve("auto", n=64) == "fused"
 
-    Patches ``jax.default_backend`` (the single probe both
-    ``backends.resolve`` and ``backends.default_interpret`` use), scoped
-    to the test by monkeypatch.
+    Patches ``jax.default_backend`` AND sets ``REPRO_FAKE_DEVICE_KIND``
+    (the env override ``backends.device_kind`` reads first — setting it
+    here also shadows any job-level value, e.g. the CI routing job's
+    ``gpu``), scoped to the test by monkeypatch. The test scope also drops
+    ``REPRO_FORCE_INTERPRET`` so interpret auto-detect assertions see the
+    faked kind, not the CI pin.
     """
 
     def _set(kind: str):
         monkeypatch.setattr(jax, "default_backend", lambda: kind)
+        monkeypatch.setenv("REPRO_FAKE_DEVICE_KIND", kind)
+        monkeypatch.delenv("REPRO_FORCE_INTERPRET", raising=False)
 
     return _set
 

@@ -50,6 +50,10 @@ N, K, PANEL, B = 64, 4, 16, 3
 BF16_RTOL = 32 * 2.0 ** -8  # DESIGN.md §8 single-update tolerance
 
 ALL_BACKENDS = backends.names()
+#: The matrix columns: every registered backend, plus the fused kernel's
+#: portable lowering as its own pseudo-column (same 'fused' registration,
+#: ``lowering='portable'`` opt — the GPU single-launch path, DESIGN.md §5).
+MATRIX_COLUMNS = ALL_BACKENDS + ("fused_portable",)
 SHAPES = ("single", "batched")
 PRECISIONS = (None, "bf16")
 
@@ -74,8 +78,19 @@ def _mesh():
 
 
 def _factor(backend, data, precision=None):
-    """A ``CholFactor`` wired for ``backend`` (skips when unrunnable)."""
+    """A ``CholFactor`` wired for ``backend`` (skips when unrunnable).
+
+    ``backend`` may be a matrix pseudo-column: 'fused_portable' is the
+    'fused' registration with the portable lowering pinned. The plain
+    'fused' column pins 'mosaic' so both columns stay deterministic under
+    the CI routing job's REPRO_FAKE_DEVICE_KIND=gpu environment (where
+    'auto' would resolve both to portable).
+    """
     meta = dict(panel=PANEL, backend=backend, precision=precision)
+    if backend == "fused_portable":
+        meta.update(backend="fused", lowering="portable")
+    elif backend == "fused":
+        meta.update(lowering="mosaic")
     if backend == "sharded":
         require_devices(2)
         meta.update(mesh=_mesh(), axis="model", interpret=None)
@@ -118,7 +133,7 @@ def _rel_frob_A(out, ref):
 
 @pytest.mark.parametrize("shape", SHAPES)
 @pytest.mark.parametrize("precision", PRECISIONS, ids=["f32", "bf16"])
-@pytest.mark.parametrize("backend", ALL_BACKENDS)
+@pytest.mark.parametrize("backend", MATRIX_COLUMNS)
 def test_update_and_downdate_agree_with_reference(backend, precision, shape):
     _registry_is_covered()
     L, V = _problem(shape, precision)
@@ -150,7 +165,7 @@ def test_update_and_downdate_agree_with_reference(backend, precision, shape):
 
 
 @pytest.mark.parametrize("shape", SHAPES)
-@pytest.mark.parametrize("backend", ALL_BACKENDS)
+@pytest.mark.parametrize("backend", MATRIX_COLUMNS)
 def test_solve_and_logdet_agree_with_reference(backend, shape):
     L, V = _problem(shape, None)
     f = _factor(backend, L).update(V)
@@ -171,7 +186,7 @@ def test_solve_and_logdet_agree_with_reference(backend, shape):
 
 
 @pytest.mark.parametrize("shape", SHAPES)
-@pytest.mark.parametrize("backend", ALL_BACKENDS)
+@pytest.mark.parametrize("backend", MATRIX_COLUMNS)
 def test_grad_agrees_with_reference_backend(backend, shape):
     n, k, panel = 16, 2, 4
     if shape == "batched":
@@ -181,6 +196,8 @@ def test_grad_agrees_with_reference_backend(backend, shape):
 
     def loss_with(name):
         meta = dict(panel=panel, backend=name)
+        if name == "fused_portable":
+            meta.update(backend="fused", lowering="portable")
         if name == "sharded":
             require_devices(2)
             meta.update(mesh=_mesh(), axis="model")
@@ -211,15 +228,33 @@ def test_auto_routing_per_device_kind(fake_device_kind):
     both resolve() and default_interpret() read — no real hardware."""
     fake_device_kind("tpu")
     assert backends.resolve("auto", n=N) == "fused"
+    assert backends.resolve_lowering("auto") == "mosaic"
     assert backends.default_interpret() is False
     assert backends.default_interpret(mosaic_only=True) is False
-    fake_device_kind("gpu")
-    assert backends.resolve("auto", n=N) == "pallas_gemm"
-    assert backends.default_interpret() is False
-    assert backends.default_interpret(mosaic_only=True) is True
+    for kind in ("gpu", "cuda", "rocm"):
+        fake_device_kind(kind)
+        # ISSUE 7 acceptance: the paper's target hardware takes the
+        # single-launch fused path via the portable lowering — no more
+        # routing GPU to the O(n/panel)-launch per-panel cascade.
+        assert backends.resolve("auto", n=N) == "fused"
+        assert backends.resolve_lowering("auto") == "portable"
+        assert backends.default_interpret() is False
+        assert backends.default_interpret(lowering="portable") is False
+        assert backends.default_interpret(lowering="mosaic") is True
+        assert backends.default_interpret(mosaic_only=True) is True
     fake_device_kind("cpu")
     assert backends.resolve("auto", n=N) in ("reference", "gemm")
+    assert backends.resolve_lowering("auto") == "mosaic"
     assert backends.default_interpret() is True
+
+
+def test_resolve_lowering_explicit_and_invalid():
+    assert backends.resolve_lowering("mosaic", device_kind="gpu") == "mosaic"
+    assert backends.resolve_lowering("portable", device_kind="tpu") == \
+        "portable"
+    assert backends.resolve_lowering(None, device_kind="cuda") == "portable"
+    with pytest.raises(ValueError, match="lowering"):
+        backends.resolve_lowering("triton", device_kind="gpu")
 
 
 # ---------------------------------------------------------------------------
@@ -257,6 +292,9 @@ LAUNCH_BUDGET = {
     "pallas": fused_k.launch_count(N, PANEL, method="pallas"),
     "pallas_gemm": fused_k.launch_count(N, PANEL, method="pallas_gemm"),
     "fused": fused_k.launch_count(N, PANEL, method="fused"),
+    # ISSUE 7 acceptance: the portable lowering keeps the single-launch
+    # contract — 1 pallas_call construction per sign block, same as mosaic.
+    "fused_portable": fused_k.launch_count(N, PANEL, method="fused"),
     "sharded": 1,
 }
 
@@ -265,13 +303,13 @@ MUTATION_BUDGET = {"up_only": 1, "down_only": 1, "both": 2}
 
 
 def test_launch_budget_table_is_total():
-    # Every registered backend must carry a budget — a new backend without
+    # Every matrix column must carry a budget — a new backend without
     # one fails here, not silently.
-    assert set(LAUNCH_BUDGET) == set(ALL_BACKENDS)
+    assert set(LAUNCH_BUDGET) == set(MATRIX_COLUMNS)
 
 
 @pytest.mark.parametrize("shape", SHAPES)
-@pytest.mark.parametrize("backend", ALL_BACKENDS)
+@pytest.mark.parametrize("backend", MATRIX_COLUMNS)
 def test_pallas_launch_budget(backend, shape, monkeypatch):
     """A rank-k update constructs exactly its budgeted number of
     pallas_calls — batched or not (vmap/the fleet grid fold B into the
@@ -291,11 +329,20 @@ def test_pallas_launch_budget(backend, shape, monkeypatch):
     # The kernel wrappers are jitted: force a retrace so every pallas_call
     # construction actually runs (a warm cache would count zero).
     jax.clear_caches()
+    lo_before = fused_k.lowerings_traced()
     f.update(V).data.block_until_ready()
     assert count[0] == LAUNCH_BUDGET[backend], (
         f"{backend}/{shape}: {count[0]} pallas_call constructions, "
         f"budget {LAUNCH_BUDGET[backend]} — the launch-fusion story "
         "regressed")
+    lo_after = fused_k.lowerings_traced()
+    if backend == "fused_portable":
+        # The single construction really was the portable spec.
+        assert lo_after["portable"] - lo_before["portable"] == 1
+        assert lo_after["mosaic"] == lo_before["mosaic"]
+    elif backend == "fused":
+        assert lo_after["mosaic"] - lo_before["mosaic"] == 1
+        assert lo_after["portable"] == lo_before["portable"]
 
 
 def test_sharded_launches_traced_counter_matches_budget():

@@ -187,16 +187,20 @@ def test_auto_heuristic_prefers_fused_on_pallas_capable_targets():
 def test_auto_heuristic_recognizes_gpu():
     # Regression: 'auto' treated TPU as the only Pallas-capable device, so
     # on GPU — the paper's actual target hardware — it silently fell back
-    # to the jnp gemm path and never launched a kernel. GPU routes to the
-    # per-panel GEMM kernel (plain pallas_call, Triton-lowerable); the
-    # fused kernel's PrefetchScalarGridSpec/pltpu scratch are Mosaic-only.
+    # to the jnp gemm path and never launched a kernel. Since the portable
+    # lowering (DESIGN.md §5.1) GPU routes to the FUSED kernel too: the
+    # single-launch chain walk compiles under Triton via the carry-style
+    # portable lowering, so pallas_gemm is no longer the GPU ceiling.
     for kind in ("gpu", "cuda", "rocm", "GPU"):
         name = backends.resolve("auto", n=4096, device_kind=kind)
         assert backends.get(name).kind == "pallas", (kind, name)
-        assert name == "pallas_gemm"
-    assert backends.resolve("auto", n=64, device_kind="gpu") == "pallas_gemm"
-    # The interpret auto-detect agrees: per-panel kernels compile on GPU,
-    # the fused kernel only on TPU (one shared policy, not three copies).
+        assert name == "fused"
+        assert backends.resolve_lowering("auto", device_kind=kind) == \
+            "portable"
+    assert backends.resolve("auto", n=64, device_kind="gpu") == "fused"
+    # The interpret auto-detect agrees: the auto lowering compiles wherever
+    # the device kind is Pallas-capable (mosaic on TPU, portable on GPU) —
+    # one shared policy, not three copies.
     assert backends.default_interpret() == (
         jax.default_backend().lower() not in backends.PALLAS_DEVICE_KINDS)
     assert backends.default_interpret(mosaic_only=True) == (

@@ -171,6 +171,49 @@ def test_acceptance_trace_free_two_rung_serving_sequence(tmp_path):
         np.asarray(svc.store.factor.data, np.float32), atol=1e-6)
 
 
+def test_warmup_bakes_portable_lowering_on_gpu_kind(fake_device_kind):
+    """ISSUE 7 satellite: ``warmup_store`` under a (faked) GPU device kind
+    compiles PORTABLE-lowering executables — the AOT ladder bakes the
+    lowering the device would actually run — and the retrace guard still
+    holds across a two-rung admit/flush/evict sequence, so the portable
+    path introduces no fresh trace tier."""
+    from repro.kernels import fused as fused_k
+
+    fake_device_kind("gpu")
+    n, width = 8, 2
+    # panel=3 gives this store a unique StepSet signature: a warm cache
+    # from another test (traced WITHOUT the fake kind) would have baked
+    # the mosaic lowering and hidden the assertion below.
+    st = FactorStore(n, capacity=2, ladder=(2, 4), width=width, panel=3,
+                     backend="auto", interpret=True)
+    svc = StreamService(st, auto_flush=False)
+    before = fused_k.lowerings_traced()
+    rep = warmup_store(st)
+    after = fused_k.lowerings_traced()
+    assert rep.lowering == "portable"
+    assert after["portable"] > before["portable"]
+    assert after["mosaic"] == before["mosaic"]
+
+    rows = {u: np.stack(_rows(n, width, seed=140 + i, scale=0.2))
+            for i, u in enumerate("abc")}
+    with assert_no_retrace("gpu-kind two-rung serving sequence") as w:
+        svc.admit("a")
+        svc.admit("b")
+        for u in ("a", "b"):
+            for v in rows[u]:
+                svc.push(u, v)
+        svc.flush(force=True)
+        svc.admit("c")                       # ladder boundary: 2 -> 4
+        assert st.capacity == 4
+        for v in rows["c"]:
+            svc.push("c", v)
+        svc.push("a", (0.5 * rows["a"][0]).astype(np.float32), sign=-1)
+        svc.flush(force=True)
+        svc.evict("b")
+        svc.flush(force=True)
+    assert w.traces == 0
+
+
 def test_checkpoint_meta_records_ladder_and_slot_map(tmp_path):
     from repro import checkpoint as ckpt
 
