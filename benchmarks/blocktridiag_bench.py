@@ -1,0 +1,99 @@
+"""Block-tridiagonal backend bench: the O(n·b) memory story vs dense.
+
+ISSUE 8's acceptance quantity is bytes, not wall-clock: at matched factor
+order n, the structured rank-k update moves O(n·b) HBM bytes per sign
+block where the dense fused kernel moves O(n²) — the gap IS the paper's
+O(n) GPU-memory claim realised, and it widens as 1/b · n. Each row records
+
+* ``bytes_update``  — ``blocktridiag.bytes_per_update`` (diag+off tiles
+  read+written once, V^T loaded once) vs ``fused.bytes_per_update`` at the
+  same n/k/dtype;
+* ``bytes_factor``  — resident factor bytes, (2·nb−1)·b² vs n²;
+* wall-clock of the lax.scan twin vs the dense gemm driver (both pure
+  jnp, so the comparison is honest on any host), and of the Pallas kernel
+  tagged ``interpret=True`` off-accelerator — interpret wall-clock is
+  dispatch overhead, not kernel performance (same caveat as every kernel
+  bench in this suite).
+
+Sweeps block size b at fixed n: the bytes ratio scales like n/(4b), so
+small blocks are where the structured layout pays off hardest.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import api, backends
+from repro.core.structure import BlockTriDiagStorage
+from repro.kernels import blocktridiag as btd_k
+from repro.kernels import fused as fused_k
+
+
+def _timeit(fn, *, reps=3):
+    import jax
+
+    jax.block_until_ready(fn())  # warm (trace + compile)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _banded(nb, b, k, dtype, seed=0):
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    diag = (np.triu(rng.uniform(0.2, 1.0, size=(nb, b, b)))
+            + 2.0 * np.eye(b)).astype(np.float32)
+    off = (0.3 * rng.uniform(-1.0, 1.0, size=(nb - 1, b, b))
+           ).astype(np.float32)
+    n = nb * b
+    V = np.zeros((n, k), np.float32)
+    for c in range(k):
+        j = int(rng.integers(nb - 1))
+        V[j * b:(j + 2) * b, c] = 0.4 * rng.normal(size=2 * b)
+    S = BlockTriDiagStorage(jnp.asarray(diag), jnp.asarray(off))
+    return S.astype(jnp.dtype(dtype)), jnp.asarray(V, jnp.dtype(dtype))
+
+
+def run(csv_rows, *, quick=False, dtypes=("float32",)):
+    import jax.numpy as jnp
+
+    n, k, panel = (512, 4, 64) if quick else (4096, 8, 256)
+    blocks = (16, 32, 64) if quick else (32, 64, 128)
+    interpret = backends.default_interpret()
+    for dtype in dtypes:
+        dt = jnp.dtype(dtype)
+        dense_up = fused_k.bytes_per_update(n, panel, k, storage_dtype=dt)
+        dense_factor = n * n * dt.itemsize
+        for b in blocks:
+            nb = n // b
+            S, V = _banded(nb, b, k, dt)
+            bb = btd_k.bytes_per_update(nb, b, k, storage_dtype=dt)
+            bf = btd_k.factor_bytes(nb, b, storage_dtype=dt)
+            us_kernel = _timeit(lambda: api.chol_update(
+                S, V, method="blocktridiag", interpret=interpret))
+            us_ref = _timeit(lambda: api.chol_update(
+                S, V, method="blocktridiag_ref"))
+            csv_rows.append((
+                f"blocktridiag/n{n}b{b}k{k}/{dtype}", us_kernel,
+                f"bytes_update={bb} dense_update={dense_up} "
+                f"ratio={dense_up / bb:.1f}x bytes_factor={bf} "
+                f"dense_factor={dense_factor} launches=1 "
+                f"interpret={int(interpret)} scan_twin_us={us_ref:.1f}"))
+        # The dense wall-clock twin at matched n: the pure-jnp gemm driver
+        # (one row per dtype — it has no block-size axis).
+        rng = np.random.default_rng(1)
+        B = rng.uniform(size=(n, n)).astype(np.float32)
+        A = B.T @ B + np.eye(n, dtype=np.float32)
+        L = jnp.asarray(np.linalg.cholesky(A).T, dt)
+        Vd = jnp.asarray(rng.uniform(size=(n, k)).astype(np.float32), dt)
+        us_dense = _timeit(lambda: api.chol_update(
+            L, Vd, method="gemm", panel=panel))
+        csv_rows.append((
+            f"blocktridiag/dense_gemm_twin/n{n}k{k}/{dtype}", us_dense,
+            f"bytes_update={dense_up} bytes_factor={dense_factor} "
+            f"interpret=0"))
+    return csv_rows

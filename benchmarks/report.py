@@ -210,6 +210,32 @@ def distributed_table(rec):
     return "\n".join(lines + ["", _interpret_note(rec)])
 
 
+def blocktridiag_table(rec):
+    """BENCH_blocktridiag.json rows: the block-size sweep at matched n.
+
+    The acceptance quantity is the bytes column pair — structured
+    bytes-per-update vs the dense fused kernel at the same n/k/dtype —
+    so the table leads with the ratio. The dense_gemm_twin rows give the
+    dense wall-clock at matched n for context; mode tags interpret rows
+    exactly as the other kernel tables do (their wall-clock is
+    dispatch-bound, the bytes columns stay real).
+    """
+    lines = [
+        "| row | us | bytes/update | dense bytes | ratio | factor bytes "
+        "| launches | mode |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for row in rec.get("rows", []):
+        d = parse_derived(row["derived"])
+        lines.append(
+            f"| {row['name']} | {row['us']:.1f} "
+            f"| {d.get('bytes_update', '—')} | {d.get('dense_update', '—')} "
+            f"| {d.get('ratio', '—')} | {d.get('bytes_factor', '—')} "
+            f"| {d.get('launches', '—')} | {row_mode(row, rec)} |"
+        )
+    return "\n".join(lines + ["", _interpret_note(rec)])
+
+
 def _rec_origin(rec):
     """Human tag for where a snapshot record ran (ISSUE 7 fields)."""
     bits = [f"backend={rec['backend']}"]
@@ -248,6 +274,12 @@ def snapshot_sections():
         print(f"\n### Distributed / sharded fleets ({rec['commit']}, "
               f"{_rec_origin(rec)})\n")
         print(distributed_table(rec))
+    btd = load_snapshot("BENCH_blocktridiag.json")
+    if btd:
+        rec = btd[-1]
+        print(f"\n### Block-tridiagonal factors ({rec['commit']}, "
+              f"{_rec_origin(rec)})\n")
+        print(blocktridiag_table(rec))
 
 
 def main():

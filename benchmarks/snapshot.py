@@ -40,6 +40,9 @@ RESULTS = Path(__file__).resolve().parent / "results"
 SNAPSHOT = RESULTS / "BENCH_cholupdate.json"
 SNAPSHOT_STREAM = RESULTS / "BENCH_stream.json"
 SNAPSHOT_DISTRIBUTED = RESULTS / "BENCH_distributed.json"
+# ISSUE 8: the structured-factor suite has its own axes (block size b,
+# bytes-per-update vs dense at matched n) — its own trajectory file.
+SNAPSHOT_BLOCKTRIDIAG = RESULTS / "BENCH_blocktridiag.json"
 
 
 def _git_commit() -> str:
@@ -75,6 +78,7 @@ def main() -> None:
     import jax
 
     from benchmarks import (
+        blocktridiag_bench,
         cholupdate_bench,
         distributed_bench,
         kernel_bench,
@@ -91,6 +95,7 @@ def main() -> None:
         "distributed": (distributed_bench.run, SNAPSHOT_DISTRIBUTED),
         "optimizer": (optimizer_bench.run, SNAPSHOT),
         "stream": (stream_bench.run, SNAPSHOT_STREAM),
+        "blocktridiag": (blocktridiag_bench.run, SNAPSHOT_BLOCKTRIDIAG),
     }
     dtypes = tuple(d for d in args.dtype.split(",") if d)
     by_file = {}

@@ -11,10 +11,13 @@
 #                                 # bytes-per-update land in the snapshot)
 #
 # The stream suite (coalesce-width sweep, DESIGN.md §9) appends to its own
-# trajectory file benchmarks/results/BENCH_stream.json, and the distributed
+# trajectory file benchmarks/results/BENCH_stream.json, the distributed
 # suite (device-scaling + sharded-fleet axis, DESIGN.md §10) to
-# BENCH_distributed.json; everything else shares BENCH_cholupdate.json.
-# Render all three with `python -m benchmarks.report`.
+# BENCH_distributed.json, and the blocktridiag suite (block-size sweep:
+# structured bytes-per-update vs the dense fused kernel at matched n,
+# DESIGN.md §12 — `--only blocktridiag`) to BENCH_blocktridiag.json;
+# everything else shares BENCH_cholupdate.json. Render all of them with
+# `python -m benchmarks.report`.
 #
 # Every record carries platform / device_kind / lowering (ISSUE 7): which
 # jax backend ran it, on what accelerator, and which fused-kernel lowering

@@ -16,6 +16,10 @@
 * ``sharded``     — column-sharded multi-device driver composing the fused
                     kernel, one launch per shard (DESIGN.md §7); pass
                     ``mesh=`` (and optionally ``axis=``).
+* ``blocktridiag``/``blocktridiag_ref`` — the structured pair (DESIGN.md
+                    §12): valid only for ``BlockTriDiagStorage`` factors,
+                    as dense-only backends are valid only for arrays —
+                    ``backends.methods(structure=...)`` reports the split.
 * ``auto``        — heuristic (``backends.resolve``): fused on TPU or under
                     explicit interpret mode, pallas_gemm on GPU (Triton —
                     the fused kernel's grid spec is Mosaic-only), reference
@@ -58,6 +62,7 @@ from typing import Optional
 import jax
 
 from repro.core import autodiff, backends
+from repro.core import structure as _structure
 from repro.core.precision import Precision
 
 # ---------------------------------------------------------------------------
@@ -158,7 +163,8 @@ def chol_update(
         )
     if sigma not in (1, -1):
         raise ValueError(f"sigma must be +1 or -1, got {sigma}")
-    if L.ndim == 3 and method != "sharded":
+    structured = _structure.is_factor_storage(L)
+    if not structured and L.ndim == 3 and method != "sharded":
         # Only the sharded driver consumes a stacked fleet natively (it
         # folds the batch into its per-shard launch); every other backend
         # batches through the vmapping wrapper.
@@ -174,6 +180,10 @@ def chol_update(
         V = V.astype(L.dtype)
     precision = Precision.parse(precision)
     impl = _cached_impl(method, panel, interpret, precision, opts)
+    if structured:
+        # Structured storage carries its own Murray rule (the tangent is
+        # re-extracted into the storage's block layout).
+        return autodiff.diffable_update_structured(impl, sigma, L, V)
     return autodiff.diffable_update(impl, sigma, L, V)
 
 

@@ -121,6 +121,12 @@ class Backend:
     fn: Callable
     kind: str  # 'serial' | 'blocked' | 'pallas' | 'collective'
     description: str
+    # Factor storage structures this backend can modify (DESIGN.md §12).
+    # Dense backends index into (n, n) rows/panels — handing them a
+    # BlockTriDiagStorage cannot work even by accident, so the funnel
+    # rejects the pairing up front instead of letting shape errors escape
+    # from deep inside a kernel trace.
+    structures: Tuple[str, ...] = ("dense",)
 
     def __call__(self, L, V, *, sigma, panel, interpret, precision=None,
                  **opts):
@@ -137,13 +143,14 @@ class Backend:
 _REGISTRY: Dict[str, Backend] = {}
 
 
-def register(name: str, *, kind: str, description: str):
+def register(name: str, *, kind: str, description: str,
+             structures: Tuple[str, ...] = ("dense",)):
     """Decorator registering ``fn`` as backend ``name``."""
 
     def deco(fn: Callable) -> Callable:
         if name in _REGISTRY:
             raise ValueError(f"backend {name!r} already registered")
-        _REGISTRY[name] = Backend(name, fn, kind, description)
+        _REGISTRY[name] = Backend(name, fn, kind, description, structures)
         return fn
 
     return deco
@@ -159,14 +166,25 @@ def get(name: str) -> Backend:
         ) from None
 
 
-def names() -> Tuple[str, ...]:
-    """Registered backend names, registration order."""
-    return tuple(_REGISTRY)
+def names(structure: Optional[str] = None) -> Tuple[str, ...]:
+    """Registered backend names, registration order.
+
+    With ``structure=`` given, only the backends valid for that factor
+    storage structure ('dense', 'blocktridiag', ...). No argument keeps the
+    historical meaning: every registered backend.
+    """
+    if structure is None:
+        return tuple(_REGISTRY)
+    return tuple(n for n, b in _REGISTRY.items() if structure in b.structures)
 
 
-def methods() -> Tuple[str, ...]:
-    """Valid ``method=`` strings: every backend plus the 'auto' heuristic."""
-    return names() + ("auto",)
+def methods(structure: Optional[str] = None) -> Tuple[str, ...]:
+    """Valid ``method=`` strings: every backend plus the 'auto' heuristic.
+
+    ``structure=`` narrows to the methods valid for one storage structure —
+    'auto' is always valid (it resolves per structure).
+    """
+    return names(structure) + ("auto",)
 
 
 def resolve(
@@ -176,24 +194,43 @@ def resolve(
     panel: int = 256,
     interpret: Optional[bool] = None,
     device_kind: Optional[str] = None,
+    structure: str = "dense",
 ) -> str:
     """Map ``method`` (possibly 'auto') to a concrete backend name.
 
-    The 'auto' heuristic prefers the single-launch fused kernel on EVERY
-    Pallas-capable device (or under explicitly requested interpret mode):
-    the Mosaic lowering on TPU, the portable lowering on gpu/cuda/rocm —
-    the paper's actual target hardware, which used to route to the
-    O(n/panel)-launch per-panel GEMM cascade because the fused grid spec
-    was Mosaic-only (see ``resolve_lowering``). Otherwise the pure-JAX
-    paths: the serial oracle for problems under two panels (where
-    panelling buys nothing) and the transform-GEMM driver beyond.
+    An explicit ``method`` must support ``structure`` — a dense-only
+    backend asked to modify structured storage raises immediately with the
+    valid set for that structure (the error a user can act on, instead of a
+    shape mismatch from inside a kernel trace).
+
+    The dense 'auto' heuristic prefers the single-launch fused kernel on
+    EVERY Pallas-capable device (or under explicitly requested interpret
+    mode): the Mosaic lowering on TPU, the portable lowering on
+    gpu/cuda/rocm — the paper's actual target hardware, which used to
+    route to the O(n/panel)-launch per-panel GEMM cascade because the
+    fused grid spec was Mosaic-only (see ``resolve_lowering``). Otherwise
+    the pure-JAX paths: the serial oracle for problems under two panels
+    (where panelling buys nothing) and the transform-GEMM driver beyond.
+
+    The 'blocktridiag' structure has one kernel and one pure-jnp twin: the
+    block-chain Pallas kernel wherever Pallas can lower it (or under
+    interpret mode), the lax.scan reference elsewhere.
     """
     if method != "auto":
-        get(method)  # validate
+        backend = get(method)  # validate the name first
+        if structure not in backend.structures:
+            raise ValueError(
+                f"method {method!r} supports structures "
+                f"{backend.structures}, not {structure!r}; valid methods "
+                f"for {structure!r}: {methods(structure)}")
         return method
     if device_kind is None:
         device_kind = _current_device_kind()
     device_kind = device_kind.lower()
+    if structure == "blocktridiag":
+        if device_kind in PALLAS_DEVICE_KINDS or interpret:
+            return "blocktridiag"
+        return "blocktridiag_ref"
     if device_kind in PALLAS_DEVICE_KINDS or interpret:
         return "fused"
     if n < 2 * panel:
@@ -203,8 +240,18 @@ def resolve(
 
 def dispatch(L, V, *, sigma, method, panel, interpret, precision=None,
              **opts):
-    """Resolve + run: the single funnel every consumer's update flows through."""
-    name = resolve(method, n=L.shape[0], panel=panel, interpret=interpret)
+    """Resolve + run: the single funnel every consumer's update flows through.
+
+    ``L`` is either a dense (n, n) / (B, n, n) array or a ``FactorStorage``
+    (anything carrying a ``structure`` attribute). The heuristic's n is the
+    factor ORDER — ``L.shape[-1]`` for dense (``shape[0]`` would read the
+    batch count off a (B, n, n) leaf reaching the funnel directly), the
+    storage's own ``n`` otherwise.
+    """
+    structure = getattr(L, "structure", "dense")
+    n = L.shape[-1] if structure == "dense" else L.n
+    name = resolve(method, n=n, panel=panel, interpret=interpret,
+                   structure=structure)
     return get(name)(L, V, sigma=sigma, panel=panel, interpret=interpret,
                      precision=precision, **opts)
 
@@ -281,6 +328,33 @@ def _fused(L, V, *, sigma, panel, interpret, precision=None, **opts):
     return kernel_fused.chol_update_fused(L, V, sigma=sigma, panel=panel,
                                           interpret=interpret,
                                           precision=precision, **opts)
+
+
+@register("blocktridiag", kind="pallas", structures=("blocktridiag",),
+          description="block-chain Pallas kernel for block-bidiagonal "
+                      "factors: ONE launch per sign block, O(n*b) bytes "
+                      "(DESIGN.md §12)")
+def _blocktridiag(L, V, *, sigma, panel, interpret, precision=None, **opts):
+    del panel  # the chain's tile size is the storage's block size
+    opts.pop("lowering", None)  # single portable lowering; accepted + ignored
+    from repro.kernels import blocktridiag as kernel_btd
+
+    return kernel_btd.chol_update_blocktridiag(L, V, sigma=sigma,
+                                               interpret=interpret,
+                                               precision=precision, **opts)
+
+
+@register("blocktridiag_ref", kind="blocked", structures=("blocktridiag",),
+          description="pure-jnp lax.scan twin of the block-chain kernel "
+                      "(panel_diag + transform-GEMM apply per block)")
+def _blocktridiag_ref(L, V, *, sigma, panel, interpret, precision=None,
+                      **opts):
+    del panel, interpret
+    opts.pop("lowering", None)
+    from repro.core import structure
+
+    return structure.chol_update_blocktridiag_ref(L, V, sigma=sigma,
+                                                  precision=precision, **opts)
 
 
 @register("sharded", kind="collective",

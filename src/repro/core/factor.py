@@ -42,7 +42,8 @@ from typing import Optional, Union
 import jax
 import jax.numpy as jnp
 
-from repro.core import api, backends, solve as _solve
+from repro.core import api, backends
+from repro.core import structure as _structure
 from repro.core.precision import Precision
 
 Axis = Union[str, tuple]
@@ -54,7 +55,13 @@ class CholFactor:
     """Upper Cholesky factor (``A = L^T L``) + execution metadata.
 
     Attributes:
-      data: (n, n) — or (B, n, n) batched — upper-triangular factor(s).
+      data: (n, n) — or (B, n, n) batched — upper-triangular factor(s), OR
+        a structured ``FactorStorage`` (e.g. ``BlockTriDiagStorage`` —
+        ``CholFactor.from_blocktridiag``). Layout-specific operations are
+        delegated to the storage layer (``repro.core.structure``,
+        DESIGN.md §12); for dense data the delegate inlines the exact code
+        this class used to carry, so dense behaviour is bit-identical and
+        the pytree leaf stays the bare array.
       panel: row-panel size for the blocked/kernel backends.
       backend: registry name or 'auto' (resolved per call by heuristics).
       interpret: force Pallas interpret mode (None = auto-detect).
@@ -107,7 +114,25 @@ class CholFactor:
     @classmethod
     def from_factor(cls, L, **meta) -> "CholFactor":
         """Wrap an existing upper factor (no validation, no copy)."""
+        if _structure.is_factor_storage(L):
+            return cls(L, **meta)
         return cls(jnp.asarray(L), **meta)
+
+    @classmethod
+    def from_storage(cls, storage, **meta) -> "CholFactor":
+        """Wrap a ``FactorStorage`` (dense storage unwraps to the array)."""
+        return cls(storage.raw, **meta)
+
+    @classmethod
+    def from_blocktridiag(cls, Ad, Ao, **meta) -> "CholFactor":
+        """Factor a block-tridiagonal SPD matrix given as blocks.
+
+        ``Ad``: (nb, b, b) diagonal blocks; ``Ao``: (nb-1, b, b)
+        super-diagonal blocks ``A[j, j+1]``. O(nb·b³) work, O(n·b) memory —
+        the dense ``(n, n)`` matrix is never formed.
+        """
+        return cls(_structure.BlockTriDiagStorage.from_matrix_blocks(Ad, Ao),
+                   **meta)
 
     @classmethod
     def identity(cls, n: int, *, scale: float = 1.0, batch: Optional[int] = None,
@@ -120,12 +145,22 @@ class CholFactor:
 
     # -- metadata views -----------------------------------------------------
     @property
+    def storage(self) -> "_structure.FactorStorage":
+        """The layout delegate (a zero-copy view; dense data gets wrapped)."""
+        return _structure.as_storage(self.data)
+
+    @property
+    def structure(self) -> str:
+        """'dense' or a structured layout name ('blocktridiag', ...)."""
+        return getattr(self.data, "structure", "dense")
+
+    @property
     def n(self) -> int:
-        return self.data.shape[-1]
+        return self.storage.n
 
     @property
     def batched(self) -> bool:
-        return self.data.ndim == 3
+        return self.storage.batched
 
     @property
     def dtype(self):
@@ -190,6 +225,13 @@ class CholFactor:
         diagonal IS the feasibility verdict — at zero extra collectives.
         """
         down = self.downdate(V)
+        if self.structure != "dense":
+            # Structured storage is a pytree of block arrays; the scalar
+            # verdict gates every leaf.
+            ok = self.downdate_feasible(V)
+            new = jax.tree.map(lambda d, o: jnp.where(ok, d, o),
+                               down.data, self.data)
+            return dataclasses.replace(self, data=new), ok
         if self.backend == "sharded":
             diag = jnp.diagonal(down.data, axis1=-2, axis2=-1)
             ok = jnp.all(jnp.isfinite(diag) & (diag > 0), axis=-1)
@@ -207,50 +249,53 @@ class CholFactor:
         diagonal sign and silently break the positive-diagonal invariant
         that ``is_valid``/``logdet``/``solve`` all rely on.
         """
+        if self.structure != "dense":
+            # Every block of the factor scales uniformly (U and its
+            # coupling blocks alike), same as every dense entry.
+            new = jax.tree.map(lambda x: x * jnp.abs(alpha), self.data)
+            return dataclasses.replace(self, data=new)
         return dataclasses.replace(self, data=self.data * jnp.abs(alpha))
 
     # -- consumer operations (the reason the factor is maintained) ----------
-    def _percore(self, fn, *args):
-        if self.batched:
-            return jax.vmap(fn)(self.data, *args)
-        return fn(self.data, *args)
+    # All layout-specific: delegated to the storage (repro.core.structure).
+    # Dense delegation inlines the literal old code paths (same solve calls,
+    # same vmap batching) — bit-identical by construction.
 
     def solve(self, b):
         """Solve ``A x = b`` against the maintained factor."""
-        return self._percore(_solve.chol_solve, b)
+        return self.storage.solve(b)
 
     def solve_triangular(self, b, *, trans: bool):
         """One triangular solve: ``L^T x = b`` (trans) or ``L x = b``."""
-        if self.batched:
-            return jax.vmap(
-                lambda L, rhs: _solve.solve_triangular(L, rhs, trans=trans)
-            )(self.data, b)
-        return _solve.solve_triangular(self.data, b, trans=trans)
+        return self.storage.solve_triangular(b, trans=trans)
 
     def logdet(self):
         """``log det A`` from the maintained diagonal."""
-        return self._percore(_solve.chol_logdet)
+        return self.storage.logdet()
 
     def downdate_feasible(self, V):
         """True where ``A - V V^T`` stays PD (per batch element)."""
-        return self._percore(_solve.downdate_feasible, V)
+        return self.storage.downdate_feasible(V)
 
     def is_valid(self, *, tol: float = 0.0):
         """Strictly positive diagonal — the factor invariant."""
-        return self._percore(
-            lambda L: _solve.is_positive_factor(L, tol=tol))
+        return self.storage.is_valid(tol=tol)
+
+    def diagonal(self):
+        """The factor's diagonal (sqrt of A's pivots), any layout."""
+        return self.storage.diagonal()
 
     def matrix(self):
         """Materialise ``A = L^T L`` (O(n^3) — diagnostics only)."""
-        return jnp.swapaxes(self.data, -1, -2) @ self.data
+        return self.storage.matrix()
 
     def __repr__(self):  # keep aux readable in optimizer-state dumps
-        shape = "x".join(str(s) for s in self.data.shape)
-        return (f"CholFactor({shape} {self.data.dtype}, panel={self.panel}, "
-                f"backend={self.backend!r})")
+        return (f"CholFactor({self.storage.describe()} {self.dtype}, "
+                f"panel={self.panel}, backend={self.backend!r})")
 
 
 def resolve_backend_for(factor: CholFactor) -> str:
     """The concrete backend a factor's next mutation will run on."""
     return backends.resolve(factor.backend, n=factor.n, panel=factor.panel,
-                            interpret=factor.interpret)
+                            interpret=factor.interpret,
+                            structure=factor.structure)

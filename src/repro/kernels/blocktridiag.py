@@ -1,0 +1,218 @@
+"""Single-launch Pallas kernel for the block-tridiagonal rank-k
+modification (DESIGN.md §12).
+
+The dense fused kernel (``repro.kernels.fused``) walks L's panel dependency
+chain — diag block p, then every trailing tile of row p — inside ONE
+``pallas_call``. For a block-bidiagonal factor the chain is radically
+shorter: block row j has exactly ONE trailing tile, the coupling block
+``off[j] = U[j, j+1]``. A rank-k row hitting block row j therefore touches
+only blocks (j, j) and (j, j+1):
+
+    for j = 0 .. nb-1:
+        diag[j], T_j   <- hyperbolic recurrence on (diag[j], V^T slab j)
+        [off[j]; w_{j+1}] <- T_j @ [off[j]; w_{j+1}]     (one b×b GEMM pair)
+
+The second line is what carries the cascade: rotating the coupling block
+feeds block row j's rotations into the ``V^T`` slab of block j+1, which the
+next chain step consumes. Work is O(k·b²·nb), memory O(n·b) — n never
+appears squared anywhere, which IS the paper's O(n) scaling story realised
+(the dense path's O(n²) factor bytes were the cap, not the kernel).
+
+Why skipping the other trailing tiles is exact (the dependency argument):
+tiles ``U[j, t]`` with ``t > j+1`` are zero by structure, and the ``V^T``
+slabs beyond j+1 hold only columns whose support has not been reached yet
+— their rotation coefficients at block j are identities (``v = 0 -> c = 1,
+s = 0``), so the dense rule's action on those slabs is the identity map.
+This requires every COLUMN of V to be supported inside one adjacent block
+pair (``repro.core.structure.assert_blocklocal``); wider support would
+generate fill-in no block-bidiagonal factor can represent at all.
+
+Lowering: one portable spec only (plain ``pl.GridSpec``, grid=(1,), the
+chain as an in-kernel ``fori_loop`` with the running ``V^T`` in the loop
+carry — the same shape as the fused kernel's portable lowering), so it
+compiles under both Mosaic and Triton; there is no Mosaic-specific variant
+to pick, hence no ``lowering=`` option. Instrumentation mirrors
+``fused.lowerings_traced``: ``launches_traced()`` counts pallas_call
+constructions, and the conformance suite pins ONE per sign block.
+
+Precision (DESIGN.md §8): the block tiles and the ``V^T`` carry move in the
+STORAGE dtype (bf16 under the low-precision policy); the recurrence, the
+transform ``T`` and GEMM accumulation run in the ACCUMULATION dtype (fp32).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.precision import Precision
+from repro.core.structure import BlockTriDiagStorage
+# ONE in-kernel copy of the hyperbolic recurrence, shared with the per-panel
+# and fused kernels (see the note in repro.kernels.cholupdate).
+from repro.kernels.cholupdate import diag_recurrence
+
+# Trace-time instrumentation: pallas_call constructions (each is one device
+# launch per execution). Tests pin this to 1 per sign block.
+_LAUNCHES_TRACED = 0
+
+
+def launches_traced() -> int:
+    """Cumulative pallas_call constructions of the block-chain kernel."""
+    return _LAUNCHES_TRACED
+
+
+def _btd_kernel(vt_in, d_ref, o_ref, d_out, o_out, *, sigma, block, k,
+                nblocks, accum_dtype):
+    """The whole block chain in ONE grid step; ``V^T`` in the loop carry.
+
+    Block arrays arrive stacked 2-D — ``d_ref``/``o_ref``: (nb·b, b) with
+    block j at rows [j·b, (j+1)·b); ``vt_in``: (k, (nb+1)·b) with a zero
+    tail slab. ``o_ref`` row-block nb-1 is a zero pad block, so every chain
+    step runs the same diag+apply pair (the last apply is a zero GEMM) —
+    no in-loop branching.
+    """
+    acc_t = accum_dtype or jnp.float32
+
+    def step(j, vt):
+        r0 = j * block
+        D = d_ref[pl.dslice(r0, block), :]
+        slab = jax.lax.dynamic_slice_in_dim(vt, r0, block, axis=1)
+        D_new, _c, _s, T = diag_recurrence(
+            D, slab, sigma=sigma, rows=block, k=k, accum_dtype=accum_dtype)
+        d_out[pl.dslice(r0, block), :] = D_new.astype(d_out.dtype)
+        # The recurrence annihilated this slab.
+        vt = jax.lax.dynamic_update_slice_in_dim(
+            vt, jnp.zeros_like(slab), r0, axis=1)
+        # Apply T to the single trailing tile + the next V^T slab: the
+        # cascade hand-off to block row j+1.
+        R = o_ref[pl.dslice(r0, block), :]
+        nxt = jax.lax.dynamic_slice_in_dim(vt, r0 + block, block, axis=1)
+        if R.dtype != T.dtype:
+            # bf16 tiles under fp32 transform: upcast in VREGs; the HBM
+            # tiles and the V^T carry stay narrow.
+            R = R.astype(T.dtype)
+            nxt = nxt.astype(T.dtype)
+        t_rr, t_rv = T[:block, :block], T[:block, block:]
+        t_vr, t_vv = T[block:, :block], T[block:, block:]
+        R_new = jnp.dot(t_rr, R, preferred_element_type=acc_t)
+        R_new += jnp.dot(t_rv, nxt, preferred_element_type=acc_t)
+        w_new = jnp.dot(t_vr, R, preferred_element_type=acc_t)
+        w_new += jnp.dot(t_vv, nxt, preferred_element_type=acc_t)
+        o_out[pl.dslice(r0, block), :] = R_new.astype(o_out.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(
+            vt, w_new.astype(vt.dtype), r0 + block, axis=1)
+
+    jax.lax.fori_loop(0, nblocks, step, vt_in[...])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("sigma", "block", "interpret", "accum_dtype"))
+def _btd_call(d2, o2, vt, *, sigma, block, interpret, accum_dtype=None):
+    global _LAUNCHES_TRACED
+    nb = d2.shape[0] // block
+    wv = vt.shape[1]
+    k = vt.shape[0]
+    grid_spec = pl.GridSpec(
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((k, wv), lambda i: (0, 0)),
+            pl.BlockSpec(d2.shape, lambda i: (0, 0)),
+            pl.BlockSpec(o2.shape, lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec(d2.shape, lambda i: (0, 0)),
+            pl.BlockSpec(o2.shape, lambda i: (0, 0)),
+        ],
+    )
+    _LAUNCHES_TRACED += 1
+    return pl.pallas_call(
+        functools.partial(_btd_kernel, sigma=sigma, block=block, k=k,
+                          nblocks=nb, accum_dtype=accum_dtype),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct(d2.shape, d2.dtype),
+            jax.ShapeDtypeStruct(o2.shape, o2.dtype),
+        ],
+        interpret=interpret,
+    )(vt, d2, o2)
+
+
+def chol_update_blocktridiag(S, V, *, sigma: int = 1, interpret=None,
+                             precision=None, **_ignored):
+    """Rank-k up/down-date of a block-bidiagonal factor, ONE pallas_call.
+
+    Args:
+      S: ``BlockTriDiagStorage`` — (nb, b, b) diag + (nb-1, b, b) off.
+      V: (n, k) or (n,) modification; every column must be supported inside
+        one adjacent block-row pair (``structure.assert_blocklocal`` — the
+        contract cannot be checked on traced values).
+      sigma: +1 update, -1 downdate.
+      interpret: force Pallas interpret mode; ``None`` auto-detects via
+        ``backends.default_interpret()`` (the portable-shape policy: the
+        kernel compiles on every Pallas-capable device kind).
+      precision: storage/accum policy ('bf16', a ``Precision``, or None).
+
+    Returns:
+      The modified ``BlockTriDiagStorage`` (storage dtype of the policy).
+    """
+    if sigma not in (1, -1):
+        raise ValueError(f"sigma must be +1 or -1, got {sigma}")
+    from repro.core.backends import default_interpret
+
+    if interpret is None:
+        interpret = default_interpret()
+    precision = Precision.parse(precision)
+    accum_dtype = None
+    if precision is not None:
+        S = precision.cast_storage(S)
+        V = precision.cast_storage(V)
+        accum_dtype = jnp.dtype(precision.accum)
+    if V.ndim == 1:
+        V = V[:, None]
+    nb, b = S.nblocks, S.block
+    k = V.shape[1]
+    # Stack blocks 2-D for the kernel refs; pad one zero off-block and one
+    # zero V^T tail slab so the last chain step is a regular (zero) apply.
+    d2 = S.diag.reshape(nb * b, b)
+    o2 = jnp.concatenate(
+        [S.off, jnp.zeros((1, b, b), S.off.dtype)], axis=0).reshape(nb * b, b)
+    vt = jnp.pad(V.T, ((0, 0), (0, b)))
+    d_new, o_new = _btd_call(d2, o2, vt, sigma=sigma, block=b,
+                             interpret=bool(interpret),
+                             accum_dtype=accum_dtype)
+    return BlockTriDiagStorage(
+        d_new.reshape(nb, b, b),
+        o_new.reshape(nb, b, b)[:nb - 1])
+
+
+# ---------------------------------------------------------------------------
+# Accounting (the BENCH_blocktridiag.json quantities)
+# ---------------------------------------------------------------------------
+
+
+def launch_count() -> int:
+    """Device launches per rank-k modification: always 1 (one sign block)."""
+    return 1
+
+
+def bytes_per_update(nb: int, b: int, k: int, *, storage_dtype) -> int:
+    """HBM bytes one structured rank-k update moves — O(n·b), not O(n²).
+
+    Every diag/off block is read once and written once (the padded zero
+    off-block included — it rides the same stacked ref), plus the one-time
+    ``(k, (nb+1)·b)`` V^T load. Compare ``fused.bytes_per_update(n=nb·b)``:
+    the dense kernel's tile traffic is O(n²) at matched n.
+    """
+    isize = int(np.dtype(jnp.dtype(storage_dtype)).itemsize)
+    tile_traffic = 2 * (nb + nb) * b * b * isize  # diag + padded off, r/w
+    vt_traffic = k * (nb + 1) * b * isize         # V^T: loaded once
+    return tile_traffic + vt_traffic
+
+
+def factor_bytes(nb: int, b: int, *, storage_dtype) -> int:
+    """Resident factor bytes: (2·nb - 1) b² elements — the O(n·b) claim."""
+    isize = int(np.dtype(jnp.dtype(storage_dtype)).itemsize)
+    return (2 * nb - 1) * b * b * isize

@@ -386,8 +386,14 @@ class FactorStore:
         """``count`` stacked warm-start factors ``sqrt(init_scale) * I``,
         built host-side: the serving path stays free of eager device ops
         (everything it dispatches is a pre-compiled step)."""
-        eye = np.sqrt(self.init_scale, dtype=np.float32) * np.eye(
-            self.n, dtype=np.float32)
+        # Compute in the fleet's row dtype, not a hardcoded f32: an f64
+        # fleet must not round its init scalar through float32 (bf16/f32
+        # fleets keep f32 arithmetic — bit-identical to before). Derived
+        # from _storage, not the row_dtype property: the constructor calls
+        # this before self._factor exists.
+        calc = row_dtype_for(self._storage)
+        eye = np.sqrt(self.init_scale, dtype=calc) * np.eye(
+            self.n, dtype=calc)
         return np.broadcast_to(
             eye.astype(self._storage), (count, self.n, self.n))
 
@@ -538,9 +544,10 @@ class FactorStore:
         if not self._empty_slots:
             self._promote()
         s = self._empty_slots.pop()
+        calc = self.row_dtype  # same init arithmetic dtype as _fresh_blocks
         block = np.sqrt(
             self.init_scale if scale is None else float(scale),
-            dtype=np.float32) * np.eye(self.n, dtype=np.float32)
+            dtype=calc) * np.eye(self.n, dtype=calc)
         new_data = self._steps.call(
             "slot_set", self._factor.data, np.int32(s),
             block.astype(self._storage))
@@ -635,8 +642,11 @@ class FactorStore:
     def decay(self, alpha) -> None:
         """Exponential forgetting: every slot becomes the factor of
         ``alpha^2 A`` (exact, via the engine's ``scale``)."""
+        # The multiplier travels in the fleet's row dtype (f64 fleets must
+        # not squeeze alpha through f32); warmup builds the 'scale'
+        # executable against the same aval.
         scaled = self._steps.call("scale", self._factor.data,
-                                  np.float32(alpha))
+                                  self.row_dtype.type(alpha))
         self._factor = self._factor.replace(data=scaled)
 
     def bucket_for(self, k: int) -> int:

@@ -162,7 +162,8 @@ def warmup_store(store: FactorStore, *,
             build("down", (data, vw))
             for w2 in widths:
                 build("both", (data, vw, _aval((cap, n, w2), row_dt)))
-        build("scale", (data, _aval((), np.float32)))
+        # decay's alpha travels in the fleet's row dtype (store.decay).
+        build("scale", (data, _aval((), row_dt)))
         build("slot_set", (data, _aval((), np.int32),
                            _aval((n, n), data_dt)))
     for cap, nxt in zip(store.ladder, store.ladder[1:]):

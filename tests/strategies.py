@@ -48,6 +48,39 @@ def make_batched_problem(B, n, k, seed=0, dtype=np.float32):
     return jnp.stack(Ls), jnp.stack(Vs)
 
 
+def make_banded_problem(nb, b, k, seed=0, dtype=np.float32):
+    """Block-tridiagonal SPD problem with BLOCK-LOCAL modification columns.
+
+    Builds a well-conditioned upper block-BIdiagonal factor U0 (diagonal
+    dominance keeps every chain pivot far from zero), forms the
+    block-tridiagonal A = U0^T U0 it induces, and draws V with each column
+    supported inside one adjacent block-row pair — the structured kernel's
+    contract (``repro.core.structure.assert_blocklocal``).
+
+    Returns ``(Ad, Ao, V)``: (nb, b, b) diagonal blocks, (nb-1, b, b)
+    super-diagonal blocks, and the (nb*b, k) modification.
+    """
+    rng = np.random.default_rng(seed)
+    U0d = (np.triu(rng.uniform(0.2, 1.0, size=(nb, b, b)))
+           + 2.0 * np.eye(b)).astype(dtype)
+    U0o = (0.3 * rng.uniform(-1.0, 1.0, size=(max(nb - 1, 0), b, b))
+           ).astype(dtype)
+    mT = lambda x: np.swapaxes(x, -1, -2)
+    Ad = mT(U0d) @ U0d
+    if nb > 1:
+        Ad[1:] += mT(U0o) @ U0o
+        Ao = mT(U0d[:-1]) @ U0o
+    else:
+        Ao = np.zeros((0, b, b), dtype)
+    n = nb * b
+    V = np.zeros((n, k), dtype)
+    for c in range(k):
+        j = int(rng.integers(nb))       # anchor block row
+        width = b if j == nb - 1 else 2 * b
+        V[j * b:j * b + width, c] = 0.4 * rng.normal(size=width)
+    return jnp.asarray(Ad), jnp.asarray(Ao), jnp.asarray(V)
+
+
 def tol_for(dtype, n):
     # Long hyperbolic recurrences accumulate roundoff ~ sqrt(n) * eps * |A|.
     eps = jnp.finfo(dtype).eps
@@ -99,6 +132,16 @@ if HAVE_HYPOTHESIS:
         return make_problem(n, k, seed=seed)
 
     @st.composite
+    def banded_spd_problems(draw, max_nb=6, max_b=8, max_k=4):
+        """Draw ``(Ad, Ao, V)`` block-tridiagonal problems with block-local
+        V columns (the structured-backend conformance distribution)."""
+        nb = draw(st.integers(min_value=2, max_value=max_nb))
+        b = draw(st.integers(min_value=2, max_value=max_b))
+        k = draw(st.integers(min_value=1, max_value=max_k))
+        seed = draw(seeds)
+        return make_banded_problem(nb, b, k, seed=seed)
+
+    @st.composite
     def feasible_streams(draw, max_n=24, max_ops=10):
         """Draw ``(n, stream)`` where every sequential prefix stays SPD —
         the feasibility-preserving up/down-date traffic of the coalescer's
@@ -111,6 +154,9 @@ if HAVE_HYPOTHESIS:
 else:  # pragma: no cover - exercised only without hypothesis
 
     def spd_problems(max_n=48, max_k=6):
+        return None
+
+    def banded_spd_problems(max_nb=6, max_b=8, max_k=4):
         return None
 
     def feasible_streams(max_n=24, max_ops=10):

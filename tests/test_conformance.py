@@ -34,12 +34,16 @@ import pytest
 from jax.experimental import pallas as pl
 
 from repro.core import CholFactor, backends, chol_update_ref
+from repro.core.structure import BlockTriDiagStorage
+from repro.kernels import blocktridiag as btd_k
 from repro.kernels import fused as fused_k
 from repro.kernels import sharded as sharded_k
 from repro.runtime.compat import make_mesh_compat
 from tests.conftest import require_devices
 from tests.hypothesis_compat import given, settings
 from tests.strategies import (
+    banded_spd_problems,
+    make_banded_problem,
     make_batched_problem,
     make_problem,
     spd_problems,
@@ -49,13 +53,21 @@ from tests.strategies import (
 N, K, PANEL, B = 64, 4, 16, 3
 BF16_RTOL = 32 * 2.0 ** -8  # DESIGN.md §8 single-update tolerance
 
-ALL_BACKENDS = backends.names()
+#: The DENSE columns only: the structured backends take array-shaped
+#: inputs these tests cannot feed (the registry itself reports the split —
+#: ``names(structure=...)``); they get their own axis below.
+ALL_BACKENDS = backends.names(structure="dense")
 #: The matrix columns: every registered backend, plus the fused kernel's
 #: portable lowering as its own pseudo-column (same 'fused' registration,
 #: ``lowering='portable'`` opt — the GPU single-launch path, DESIGN.md §5).
 MATRIX_COLUMNS = ALL_BACKENDS + ("fused_portable",)
+#: The structure axis (ISSUE 8): block-tridiagonal columns, checked against
+#: the dense reference on banded SPD problems.
+STRUCTURED_COLUMNS = backends.names(structure="blocktridiag")
 SHAPES = ("single", "batched")
 PRECISIONS = (None, "bf16")
+
+NB, BLK = 8, 8  # structured problems: 8 blocks of 8 -> n = N = 64
 
 
 def _registry_is_covered():
@@ -63,6 +75,10 @@ def _registry_is_covered():
     # parametrization below can never silently lag a new registration.
     assert set(ALL_BACKENDS) >= {"reference", "paper", "gemm", "pallas",
                                  "pallas_gemm", "fused", "sharded"}
+    assert set(STRUCTURED_COLUMNS) >= {"blocktridiag", "blocktridiag_ref"}
+    # Dense and structured validity are disjoint: a dense column handed a
+    # structured factor (or vice versa) is a registry bug.
+    assert not set(ALL_BACKENDS) & set(STRUCTURED_COLUMNS)
 
 
 def test_matrix_covers_the_whole_registry():
@@ -219,6 +235,128 @@ def test_grad_agrees_with_reference_backend(backend, shape):
 
 
 # ---------------------------------------------------------------------------
+# Structure axis (ISSUE 8): blocktridiag columns vs the dense reference on
+# banded SPD problems. Deterministic twins — these run with or without
+# hypothesis; the property variant below adds random shapes on top.
+# ---------------------------------------------------------------------------
+
+
+def _banded(backend, precision=None, seed=0):
+    """A structured CholFactor + block-local V + the dense f32 baseline."""
+    Ad, Ao, V = make_banded_problem(NB, BLK, K, seed=seed)
+    f = CholFactor.from_blocktridiag(Ad, Ao, panel=PANEL, backend=backend,
+                                     interpret=True, precision=precision)
+    L32 = f.data.to_dense()
+    if precision is not None:
+        f = f.replace(data=f.data.astype(jnp.bfloat16))
+    return f, V, L32
+
+
+@pytest.mark.parametrize("precision", PRECISIONS, ids=["f32", "bf16"])
+@pytest.mark.parametrize("backend", STRUCTURED_COLUMNS)
+def test_structured_update_and_downdate_agree_with_dense_reference(
+        backend, precision):
+    _registry_is_covered()
+    f, V, L32 = _banded(backend, precision=precision)
+    up = f.update(V)
+    ref_up = chol_update_ref(L32, V, sigma=1)
+    if precision is None:
+        np.testing.assert_allclose(
+            np.asarray(up.data.to_dense()), np.asarray(ref_up),
+            atol=tol_for(jnp.float32, N), err_msg=f"{backend} update")
+    else:
+        assert up.dtype == jnp.bfloat16, backend
+        assert _rel_frob_A(up.data.to_dense(), ref_up) < BF16_RTOL, backend
+    back = up.downdate(V)
+    if precision is None:
+        np.testing.assert_allclose(
+            np.asarray(back.data.to_dense()), np.asarray(L32),
+            atol=8 * tol_for(jnp.float32, N), err_msg=f"{backend} downdate")
+    else:
+        assert _rel_frob_A(back.data.to_dense(), L32) < 2 * BF16_RTOL, backend
+    assert bool(back.is_valid())
+
+
+@pytest.mark.parametrize("backend", STRUCTURED_COLUMNS)
+def test_structured_solve_and_logdet_agree_with_dense_reference(backend):
+    f, V, L32 = _banded(backend)
+    up = f.update(V)
+    ref_f = CholFactor.from_factor(chol_update_ref(L32, V, sigma=1),
+                                   backend="reference")
+    rhs = jnp.ones((N,), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(up.solve(rhs)), np.asarray(ref_f.solve(rhs)),
+        atol=1e-3, err_msg=f"{backend} solve")
+    np.testing.assert_allclose(
+        np.asarray(up.logdet()), np.asarray(ref_f.logdet()),
+        atol=1e-3, err_msg=f"{backend} logdet")
+    # The PD guard refuses an infeasible downdate and leaves every block
+    # bitwise unchanged (the structured jnp.where masks the whole pytree).
+    guarded, ok = up.downdate_guarded(100.0 * V)
+    assert not bool(ok)
+    np.testing.assert_array_equal(np.asarray(guarded.data.diag),
+                                  np.asarray(up.data.diag))
+
+
+@pytest.mark.parametrize("backend", STRUCTURED_COLUMNS)
+def test_structured_grad_agrees_with_dense_reference(backend):
+    """jax.grad through the structured update matches the dense Murray
+    rule on the SAME observable: a loss over the band blocks of the
+    updated factor (what the storage holds — the dense factor's off-band
+    entries are structurally zero there, so a loss reading them would be
+    a different function, not a fair comparison). The block-leaf grads
+    come out via band extraction of the dense grad: the embedding
+    blocks->dense is linear, so its adjoint IS extraction."""
+    f, V, L32 = _banded(backend, seed=3)
+    S = f.data
+
+    def band_loss(diag, off):
+        return (jnp.sum(jnp.sin(diag) * jnp.cos(0.5 * diag))
+                + jnp.sum(jnp.sin(off) * jnp.cos(0.5 * off)))
+
+    def loss_structured(diag, off, V):
+        g = CholFactor.from_factor(BlockTriDiagStorage(diag, off),
+                                   panel=PANEL, backend=backend,
+                                   interpret=True)
+        out = g.update(V).data
+        return band_loss(out.diag, out.off)
+
+    def loss_dense(L, V):
+        out = CholFactor.from_factor(L, panel=PANEL, backend="reference",
+                                     interpret=True).update(V).data
+        outS = BlockTriDiagStorage.from_dense(out, BLK)
+        return band_loss(outS.diag, outS.off)
+
+    gd, go, gV = jax.grad(loss_structured, argnums=(0, 1, 2))(
+        S.diag, S.off, V)
+    rL, rV = jax.grad(loss_dense, argnums=(0, 1))(L32, V)
+    np.testing.assert_allclose(np.asarray(gV), np.asarray(rV), atol=1e-4,
+                               err_msg=f"{backend} dV")
+    rS = BlockTriDiagStorage.from_dense(rL, BLK)
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(rS.diag),
+                               atol=1e-4, err_msg=f"{backend} d(diag)")
+    np.testing.assert_allclose(np.asarray(go), np.asarray(rS.off),
+                               atol=1e-4, err_msg=f"{backend} d(off)")
+
+
+@settings(max_examples=10, deadline=None)
+@given(problem=banded_spd_problems(max_nb=5, max_b=8, max_k=3))
+def test_property_structured_backends_agree_on_random_banded(problem):
+    Ad, Ao, V = problem
+    n = Ad.shape[0] * Ad.shape[1]
+    ref = None
+    for backend in STRUCTURED_COLUMNS:
+        f = CholFactor.from_blocktridiag(Ad, Ao, backend=backend,
+                                         interpret=True)
+        out = f.update(V).data.to_dense()
+        if ref is None:
+            ref = chol_update_ref(f.data.to_dense(), V, sigma=1)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref),
+            atol=4 * tol_for(jnp.float32, n), err_msg=backend)
+
+
+# ---------------------------------------------------------------------------
 # Routing: the auto heuristic per (faked) device kind
 # ---------------------------------------------------------------------------
 
@@ -246,6 +384,21 @@ def test_auto_routing_per_device_kind(fake_device_kind):
     assert backends.resolve("auto", n=N) in ("reference", "gemm")
     assert backends.resolve_lowering("auto") == "mosaic"
     assert backends.default_interpret() is True
+    # The structure axis routes through the SAME heuristic: kernel on
+    # Pallas-capable kinds (or interpret), lax.scan twin elsewhere; a
+    # dense-only method asked to modify structured storage is an error.
+    assert backends.resolve("auto", n=N, structure="blocktridiag") == \
+        "blocktridiag_ref"
+    assert backends.resolve("auto", n=N, structure="blocktridiag",
+                            interpret=True) == "blocktridiag"
+    for kind in ("tpu", "gpu"):
+        fake_device_kind(kind)
+        assert backends.resolve("auto", n=N, structure="blocktridiag") == \
+            "blocktridiag"
+    with pytest.raises(ValueError, match="structures"):
+        backends.resolve("fused", n=N, structure="blocktridiag")
+    with pytest.raises(ValueError, match="structures"):
+        backends.resolve("blocktridiag", n=N, structure="dense")
 
 
 def test_resolve_lowering_explicit_and_invalid():
@@ -296,6 +449,10 @@ LAUNCH_BUDGET = {
     # contract — 1 pallas_call construction per sign block, same as mosaic.
     "fused_portable": fused_k.launch_count(N, PANEL, method="fused"),
     "sharded": 1,
+    # ISSUE 8 acceptance: the whole block chain in ONE pallas_call per
+    # sign block; the lax.scan twin constructs none.
+    "blocktridiag": btd_k.launch_count(),
+    "blocktridiag_ref": 0,
 }
 
 #: Batched engine mutations one FactorStore.apply may dispatch, by blocks.
@@ -305,7 +462,30 @@ MUTATION_BUDGET = {"up_only": 1, "down_only": 1, "both": 2}
 def test_launch_budget_table_is_total():
     # Every matrix column must carry a budget — a new backend without
     # one fails here, not silently.
-    assert set(LAUNCH_BUDGET) == set(MATRIX_COLUMNS)
+    assert set(LAUNCH_BUDGET) == set(MATRIX_COLUMNS) | set(STRUCTURED_COLUMNS)
+
+
+@pytest.mark.parametrize("backend", STRUCTURED_COLUMNS)
+def test_structured_pallas_launch_budget(backend, monkeypatch):
+    """One structured rank-k update constructs exactly its budgeted number
+    of pallas_calls (ONE for the block-chain kernel, zero for the twin) —
+    and the kernel's own trace counter agrees."""
+    f, V, _ = _banded(backend)
+    count = [0]
+    real = pl.pallas_call
+
+    def counting(*args, **kw):
+        count[0] += 1
+        return real(*args, **kw)
+
+    monkeypatch.setattr(pl, "pallas_call", counting)
+    jax.clear_caches()
+    before = btd_k.launches_traced()
+    jax.block_until_ready(f.update(V).data)
+    assert count[0] == LAUNCH_BUDGET[backend], (
+        f"{backend}: {count[0]} pallas_call constructions, budget "
+        f"{LAUNCH_BUDGET[backend]}")
+    assert btd_k.launches_traced() - before == LAUNCH_BUDGET[backend]
 
 
 @pytest.mark.parametrize("shape", SHAPES)

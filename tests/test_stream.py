@@ -8,6 +8,7 @@ fused batched rank-k mutation per sign block), fleet management
 (admit/grow/evict/compact/decay), window forgetting, deadline flushes and
 the feasibility-guarded downdate path.
 """
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -174,6 +175,34 @@ def test_service_evict_idle_and_decay():
     np.testing.assert_allclose(
         np.asarray(st_.factor_for("new").matrix()), 0.25 * np.eye(4),
         atol=1e-6)
+
+
+def test_store_non_f32_dtype_threads_through_init_and_decay():
+    """Regression (ISSUE 8 satellite): the identity-init and decay paths
+    hardcoded np.float32 arithmetic while the zero-pad path respected
+    ``row_dtype`` — an f64 fleet silently rounded its init scalar and
+    decay multiplier through f32. Scalars chosen to be invisible to f32:
+    the old code produces exactly 1.0 for both."""
+    jax.config.update("jax_enable_x64", True)
+    try:
+        init = 1.0 + 2.0 ** -40   # f32(init) == 1.0
+        alpha = 1.0 - 2.0 ** -30  # f32(alpha) == 1.0 (no decay at all)
+        st_ = FactorStore(4, capacity=2, width=2, panel=4,
+                          backend="reference", init_scale=init,
+                          dtype=jnp.float64)
+        assert st_.row_dtype == np.dtype(np.float64)
+        st_.admit("u")
+        got = np.asarray(st_.factor.data[st_.slot("u")])
+        assert got.dtype == np.float64
+        expect = np.sqrt(init, dtype=np.float64)
+        assert got[0, 0] == expect != np.float64(1.0)
+        st_.decay(alpha)
+        got2 = np.asarray(st_.factor.data[st_.slot("u")])
+        assert got2[0, 0] == expect * np.float64(alpha)
+        assert got2[0, 0] != got[0, 0]
+    finally:
+        jax.config.update("jax_enable_x64", False)
+        jax.clear_caches()
 
 
 def test_store_apply_matches_batched_reference_and_pads():

@@ -1,0 +1,298 @@
+"""repro.core.structure: the storage-structure layer (ISSUE 8).
+
+Unit coverage for the layer the conformance harness's structure axis
+builds on: ``BlockTriDiagStorage``'s chain factorization and block
+substitution against their dense twins, the block-local V contract
+validator, dense delegation bit-identity through the refactored
+``CholFactor``, checkpoint round-trip of a structured factor, and the two
+acceptance pins that justify the layer's existence —
+
+* the structured modification path never materialises an ``(n, n)`` array
+  (asserted on the jaxpr: every intermediate aval, including inside
+  sub-jaxprs, stays well under n² elements);
+* ``backends.dispatch`` keys its size heuristic on the factor ORDER, not
+  ``shape[0]`` (the batched direct-dispatch regression).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.core import CholFactor, api, backends, chol_update_ref
+from repro.core.structure import (
+    BlockTriDiagStorage,
+    DenseStorage,
+    assert_blocklocal,
+    is_factor_storage,
+)
+from tests.strategies import make_banded_problem, make_problem, tol_for
+
+NB, BLK, K = 6, 8, 3
+N = NB * BLK
+
+
+def _problem(seed=0):
+    Ad, Ao, V = make_banded_problem(NB, BLK, K, seed=seed)
+    S = BlockTriDiagStorage.from_matrix_blocks(Ad, Ao)
+    return S, V, Ad, Ao
+
+
+# ---------------------------------------------------------------------------
+# BlockTriDiagStorage vs its dense twin
+# ---------------------------------------------------------------------------
+
+
+def test_chain_factorization_matches_dense_cholesky():
+    S, _, Ad, Ao = _problem()
+    A = np.zeros((N, N), np.float32)
+    for j in range(NB):
+        A[j * BLK:(j + 1) * BLK, j * BLK:(j + 1) * BLK] = Ad[j]
+    for j in range(NB - 1):
+        blk = np.asarray(Ao[j])
+        A[j * BLK:(j + 1) * BLK, (j + 1) * BLK:(j + 2) * BLK] = blk
+        A[(j + 1) * BLK:(j + 2) * BLK, j * BLK:(j + 1) * BLK] = blk.T
+    Ld = jnp.linalg.cholesky(jnp.asarray(A)).T
+    np.testing.assert_allclose(np.asarray(S.to_dense()), np.asarray(Ld),
+                               atol=tol_for(jnp.float32, N))
+    # And the storage reconstructs the blocks it was factored from.
+    Ad2, Ao2 = S.matrix_blocks()
+    np.testing.assert_allclose(np.asarray(Ad2), np.asarray(Ad), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(Ao2), np.asarray(Ao), atol=1e-4)
+
+
+def test_block_substitution_matches_dense_solves():
+    S, _, _, _ = _problem(seed=1)
+    Ld = S.to_dense()
+    rng = np.random.default_rng(2)
+    for rhs_shape in [(N,), (N, 2)]:
+        b = jnp.asarray(rng.normal(size=rhs_shape), jnp.float32)
+        for trans in (True, False):
+            got = S.solve_triangular(b, trans=trans)
+            want = jax.scipy.linalg.solve_triangular(
+                Ld, b, trans=1 if trans else 0, lower=False)
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       atol=1e-4, err_msg=f"trans={trans}")
+        np.testing.assert_allclose(
+            np.asarray(S.solve(b)),
+            np.asarray(jnp.linalg.solve(S.matrix(), b)),
+            atol=1e-3)
+    np.testing.assert_allclose(
+        float(S.logdet()),
+        float(2.0 * jnp.sum(jnp.log(jnp.diagonal(Ld)))), rtol=1e-6)
+    assert bool(S.is_valid())
+    assert S.n == N and not S.batched
+    assert "blocktridiag" in S.describe()
+
+
+def test_from_dense_to_dense_round_trip_and_feasibility():
+    S, V, _, _ = _problem(seed=3)
+    S2 = BlockTriDiagStorage.from_dense(S.to_dense(), BLK)
+    np.testing.assert_allclose(np.asarray(S2.diag), np.asarray(S.diag),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(S2.off), np.asarray(S.off),
+                               atol=1e-6)
+    # Feasibility verdict agrees with the dense criterion.
+    assert bool(S.downdate_feasible(0.1 * V))
+    assert not bool(S.downdate_feasible(100.0 * V))
+
+
+def test_blocklocal_contract_validator():
+    V = np.zeros((N, 2), np.float32)
+    V[0:2 * BLK, 0] = 1.0          # block pair {0, 1}: fine
+    V[3 * BLK:4 * BLK, 1] = 1.0    # single block: fine
+    assert_blocklocal(V, BLK)
+    V[0, 1] = 1.0                  # column 1 now spans blocks {0, 3}
+    with pytest.raises(ValueError, match="spans block rows"):
+        assert_blocklocal(V, BLK)
+    with pytest.raises(ValueError):
+        BlockTriDiagStorage(jnp.zeros((4, 8, 8)), jnp.zeros((2, 8, 8)))
+
+
+# ---------------------------------------------------------------------------
+# Dense delegation bit-identity through the refactored CholFactor
+# ---------------------------------------------------------------------------
+
+
+def test_dense_delegation_is_bit_identical():
+    from repro.core import solve as _solve
+
+    L, V = make_problem(24, 2, seed=4)
+    f = CholFactor.from_factor(L, backend="gemm", panel=8)
+    assert f.structure == "dense"
+    assert isinstance(f.storage, DenseStorage)
+    # The pytree leaf stays the BARE array (checkpoint layout unchanged).
+    leaves, _ = jax.tree_util.tree_flatten(f)
+    assert len(leaves) == 1 and leaves[0] is f.data
+    assert isinstance(f.data, jax.Array)
+    rhs = jnp.ones((24,), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(f.solve(rhs)),
+                                  np.asarray(_solve.chol_solve(L, rhs)))
+    np.testing.assert_array_equal(
+        np.asarray(f.solve_triangular(rhs, trans=True)),
+        np.asarray(_solve.solve_triangular(L, rhs, trans=True)))
+    np.testing.assert_array_equal(np.asarray(f.logdet()),
+                                  np.asarray(_solve.chol_logdet(L)))
+    np.testing.assert_array_equal(
+        np.asarray(f.matrix()),
+        np.asarray(jnp.swapaxes(L, -1, -2) @ L))
+    np.testing.assert_array_equal(np.asarray(f.diagonal()),
+                                  np.asarray(jnp.diagonal(L)))
+    assert not is_factor_storage(L)
+    assert is_factor_storage(f.storage)
+
+
+# ---------------------------------------------------------------------------
+# Structured factor as a pytree: jit, scan, checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_structured_factor_jits_and_scans():
+    S, V, _, _ = _problem(seed=5)
+    f = CholFactor.from_storage(S, backend="blocktridiag_ref")
+
+    @jax.jit
+    def step(fac, v):
+        return fac.update(v), fac.logdet()
+
+    f2, ld = step(f, V)
+    assert isinstance(f2.data, BlockTriDiagStorage)
+    ref = chol_update_ref(S.to_dense(), V, sigma=1)
+    np.testing.assert_allclose(np.asarray(f2.data.to_dense()),
+                               np.asarray(ref),
+                               atol=tol_for(jnp.float32, N))
+
+
+def test_structured_factor_checkpoint_round_trip(tmp_path):
+    S, V, _, _ = _problem(seed=6)
+    f = CholFactor.from_storage(S, backend="blocktridiag_ref").update(V)
+    state = {"factor": f, "step": jnp.asarray(3)}
+    ckpt.save(tmp_path, 1, state)
+    like = {"factor": CholFactor.from_storage(
+        BlockTriDiagStorage(jnp.zeros_like(S.diag), jnp.zeros_like(S.off)),
+        backend="blocktridiag_ref"), "step": jnp.asarray(0)}
+    got = ckpt.restore(tmp_path, 1, like)
+    assert isinstance(got["factor"].data, BlockTriDiagStorage)
+    np.testing.assert_array_equal(np.asarray(got["factor"].data.diag),
+                                  np.asarray(f.data.diag))
+    np.testing.assert_array_equal(np.asarray(got["factor"].data.off),
+                                  np.asarray(f.data.off))
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: the modification path never materialises (n, n)
+# ---------------------------------------------------------------------------
+
+
+def _iter_jaxprs(jaxpr):
+    """The jaxpr and every sub-jaxpr reachable through eqn params."""
+    yield jaxpr
+    for eqn in jaxpr.eqns:
+        for val in eqn.params.values():
+            vals = val if isinstance(val, (tuple, list)) else (val,)
+            for v in vals:
+                inner = getattr(v, "jaxpr", v)
+                if hasattr(inner, "eqns"):
+                    yield from _iter_jaxprs(inner)
+
+
+@pytest.mark.parametrize("backend", ["blocktridiag", "blocktridiag_ref"])
+def test_modification_path_never_materialises_dense(backend):
+    """ISSUE 8 acceptance: every intermediate aval of the structured
+    update — including inside scan/pallas/custom_jvp sub-jaxprs — holds
+    far fewer than n² elements. The largest structured buffer is the
+    (nb·b, b) stacked diag (n·b elements); a dense materialisation at
+    n = 48 would be 2304 and trips the n²/2 bar immediately."""
+    S, V, _, _ = _problem()
+
+    def step(S, V):
+        return api.chol_update(S, V, method=backend, interpret=True)
+
+    jaxpr = jax.make_jaxpr(step)(S, V)
+    bar = N * N // 2
+    biggest = 0
+    for jx in _iter_jaxprs(jaxpr.jaxpr):
+        for eqn in jx.eqns:
+            for var in list(eqn.invars) + list(eqn.outvars):
+                aval = getattr(var, "aval", None)
+                shape = getattr(aval, "shape", None)
+                if shape is None:
+                    continue
+                size = int(np.prod(shape, dtype=np.int64))
+                biggest = max(biggest, size)
+                assert size < bar, (
+                    f"{backend}: aval {shape} ({size} elems) in "
+                    f"{eqn.primitive} — the O(n·b) path materialised a "
+                    f"dense-scale buffer (bar {bar})")
+    # Sanity that the walk saw the real buffers, not an empty graph.
+    assert biggest >= NB * BLK * BLK
+
+
+def test_structured_grad_does_densify_but_primal_does_not():
+    """The Murray tangent lift is documented O(n²) (autodiff follow-up);
+    pin the asymmetry so a future band-respecting tangent can flip this
+    test, and a regression that densifies the PRIMAL cannot hide."""
+    S, V, _, _ = _problem()
+
+    def loss(S, V):
+        return api.chol_update(S, V, method="blocktridiag_ref").logdet()
+
+    jaxpr = jax.make_jaxpr(jax.grad(loss, argnums=1))(S, V)
+    sizes = [int(np.prod(getattr(v.aval, "shape", ()), dtype=np.int64))
+             for jx in _iter_jaxprs(jaxpr.jaxpr) for eqn in jx.eqns
+             for v in list(eqn.invars) + list(eqn.outvars)
+             if hasattr(v, "aval")]
+    assert max(sizes) >= N * N  # the dense lift is (currently) expected
+
+
+# ---------------------------------------------------------------------------
+# Regression: dispatch sizes its heuristic by factor order, not shape[0]
+# ---------------------------------------------------------------------------
+
+
+def test_dispatch_n_is_factor_order_not_batch_count(monkeypatch,
+                                                    fake_device_kind):
+    """``backends.dispatch`` used ``n=L.shape[0]`` — for a batched
+    (B, n, n) leaf reaching the funnel directly that reads the BATCH
+    count, so a fleet of 2 factors of order 512 resolved as n=2 and the
+    auto heuristic picked the serial oracle instead of the panelled GEMM
+    driver. The backend is stubbed out: only routing is under test."""
+    fake_device_kind("cpu")
+    resolved = []
+
+    def fake_get(name):
+        resolved.append(name)
+        return lambda L, V, **kw: L
+
+    monkeypatch.setattr(backends, "get", fake_get)
+    B, n = 2, 512
+    L = jnp.zeros((B, n, n), jnp.float32)
+    V = jnp.zeros((B, n, 1), jnp.float32)
+    backends.dispatch(L, V, sigma=1, method="auto", panel=256,
+                      interpret=None)
+    # n=512 >= 2*panel -> 'gemm'; the old shape[0]=2 gave 'reference'.
+    assert resolved == ["gemm"]
+    # Structured storage routes by the storage's own order (no .shape at
+    # all on the storage path).
+    resolved.clear()
+    S, V2, _, _ = _problem()
+    backends.dispatch(S, V2, sigma=1, method="auto", panel=256,
+                      interpret=True)
+    assert resolved == ["blocktridiag"]
+
+
+def test_structured_factor_repr_and_scale():
+    S, _, _, _ = _problem()
+    f = CholFactor.from_storage(S, backend="blocktridiag_ref")
+    assert "blocktridiag" in repr(f)
+    g = f.scale(0.5)
+    np.testing.assert_allclose(np.asarray(g.data.diag),
+                               0.5 * np.asarray(S.diag), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(g.data.off),
+                               0.5 * np.asarray(S.off), rtol=1e-6)
+    # replace() keeps the storage data shared (metadata-only change).
+    h = f.with_backend("blocktridiag")
+    assert h.data is f.data
+    assert dataclasses.replace(h, panel=32).panel == 32
