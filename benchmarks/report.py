@@ -193,6 +193,52 @@ def stream_table(rec):
     return "\n".join(lines + ["", _interpret_note(rec), ""] + extras)
 
 
+def obs_table(rec):
+    """Serving metrics from the registry snapshot a BENCH_stream.json
+    record embeds (PR 9): flush latency percentiles per reason, retraces,
+    ladder occupancy. Sourced from the SAME ``repro.obs`` registry the
+    serving stack measures itself with — this table and the stack's own
+    metrics cannot disagree. None for records predating the ``obs``
+    field."""
+    snap = rec.get("obs")
+    if not snap:
+        return None
+    from repro.obs.metrics import percentile_from
+
+    lines = [
+        "| flush reason | flushes | p50 | p99 |",
+        "|---|---|---|---|",
+    ]
+    found = False
+    for key, h in sorted(snap.get("histograms", {}).items()):
+        if not key.startswith("repro.stream.flush_seconds") or not h["count"]:
+            continue
+        found = True
+        reason = key.split("reason=", 1)[-1].rstrip("}") \
+            if "reason=" in key else "—"
+        p50 = percentile_from(h, 50) * 1e6
+        p99 = percentile_from(h, 99) * 1e6
+        lines.append(f"| {reason} | {h['count']} "
+                     f"| <={p50:.0f}us | <={p99:.0f}us |")
+    if not found:
+        return None
+    c, g = snap.get("counters", {}), snap.get("gauges", {})
+
+    def _total(name):
+        return sum(v for k, v in c.items()
+                   if k == name or k.startswith(name + "{"))
+
+    tail = (f"retraces={_total('repro.stream.retraces')} "
+            f"guard_rejects={_total('repro.stream.guard_rejects')} "
+            f"admissions={_total('repro.stream.admissions')} "
+            f"evictions={_total('repro.stream.evictions')} "
+            f"promotions={_total('repro.stream.promotions')} "
+            f"ladder_occupancy="
+            f"{g.get('repro.stream.ladder_occupancy', 0.0):.2f} "
+            f"wal_bytes={_total('repro.stream.wal_bytes')}")
+    return "\n".join(lines + ["", tail])
+
+
 def distributed_table(rec):
     """BENCH_distributed.json rows: device scaling + the fleet axis
     (launches per shard vs fleet size, DESIGN.md §10)."""
@@ -268,6 +314,13 @@ def snapshot_sections():
         print(f"\n### Streaming service ({rec['commit']}, "
               f"{_rec_origin(rec)})\n")
         print(stream_table(rec))
+        for rec in reversed(stream):  # newest record carrying a snapshot
+            table = obs_table(rec)
+            if table:
+                print(f"\n### Serving observability ({rec['commit']}, "
+                      f"{_rec_origin(rec)})\n")
+                print(table)
+                break
     dist = load_snapshot("BENCH_distributed.json")
     if dist:
         rec = dist[-1]

@@ -124,6 +124,13 @@ def main() -> None:
         device_kind = jax.devices()[0].device_kind
     except Exception:
         device_kind = "unknown"
+    # PR 9: each record embeds the registry snapshot the run accumulated,
+    # so report.py renders serving metrics (flush percentiles, retraces,
+    # occupancy) from the SAME source the serving stack measures itself
+    # with — bench rows and serving metrics can never disagree.
+    from repro.obs import metrics as obs_metrics
+
+    obs_snapshot = obs_metrics.snapshot()
     for outfile, rows in by_file.items():
         record = {
             "ts": ts,
@@ -135,6 +142,7 @@ def main() -> None:
             "quick": not args.full,
             "suites": ",".join(suites_by_file[outfile]),
             "dtypes": list(dtypes),
+            "obs": obs_snapshot,
             "rows": [
                 {"name": n, "us": round(us, 1), "derived": derived}
                 for n, us, derived in rows

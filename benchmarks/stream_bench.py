@@ -47,8 +47,26 @@ import numpy as np
 
 from repro.core.precision import Precision
 from repro.kernels import fused as fused_k
+from repro.obs import metrics as obs_metrics
 from repro.stream import FactorStore, StreamService
 from repro.stream import store as store_mod
+
+
+def _flush_hist(snapshot):
+    """Merge every ``repro.stream.flush_seconds`` series of a (diffed)
+    registry snapshot into one histogram entry; None when empty."""
+    merged = None
+    for key, h in snapshot.get("histograms", {}).items():
+        if not key.startswith("repro.stream.flush_seconds"):
+            continue
+        if merged is None:
+            merged = {"count": 0, "sum": 0.0, "edges": h["edges"],
+                      "counts": [0] * len(h["counts"])}
+        merged["count"] += h["count"]
+        merged["sum"] += h["sum"]
+        merged["counts"] = [a + b
+                            for a, b in zip(merged["counts"], h["counts"])]
+    return merged if merged and merged["count"] else None
 
 
 def _drive(*, B, n, R, width, panel, interpret, precision=None, seed=0):
@@ -118,9 +136,23 @@ def latency(csv_rows, *, quick=False, tiny=False):
         return lat, store_mod.traces_counted() - traces0
 
     cold, cold_traces = drive(warm=False)
+    # Diff the process-cumulative registry around the warm drive: the
+    # service's OWN flush-latency histogram over exactly these flushes —
+    # cross-checking the benchmark's external perf_counter percentiles
+    # against the numbers the serving stack reports about itself.
+    snap0 = obs_metrics.snapshot()
     warm, warm_traces = drive(warm=True)
+    delta = obs_metrics.diff_snapshots(snap0, obs_metrics.snapshot())
     steady = warm[1:]
     p50, p99 = _percentile(steady, 50), _percentile(steady, 99)
+    svc = ""
+    hist = _flush_hist(delta)
+    if hist:
+        svc = (f"svc_p50_us="
+               f"{obs_metrics.percentile_from(hist, 50) * 1e6:.0f} "
+               f"svc_p99_us="
+               f"{obs_metrics.percentile_from(hist, 99) * 1e6:.0f} "
+               f"svc_flushes={hist['count']} ")
     csv_rows.append(
         (f"stream/latency/first_flush/B{B}n{n}w{width}", warm[0],
          f"cold_first_us={cold[0]:.1f} warm_first_us={warm[0]:.1f} "
@@ -130,7 +162,7 @@ def latency(csv_rows, *, quick=False, tiny=False):
     )
     csv_rows.append(
         (f"stream/latency/steady/B{B}n{n}w{width}", p50,
-         f"steady_p50_us={p50:.1f} steady_p99_us={p99:.1f} "
+         f"steady_p50_us={p50:.1f} steady_p99_us={p99:.1f} {svc}"
          f"warm_first_over_p50={warm[0] / p50:.2f} "
          f"steady_within_2x_first={int(p50 <= 2 * warm[0])} "
          f"interpret={int(interpret)}")

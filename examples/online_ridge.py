@@ -192,3 +192,7 @@ if __name__ == "__main__":
         run_batched(users=args.users)
     else:
         run_single()
+
+    import repro.obs as obs
+
+    print(obs.summary_line())

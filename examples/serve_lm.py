@@ -138,7 +138,7 @@ def personalize(token_stream, *, d_feat=32, width=8, window=16, lam=1e-1,
     return max_err, mutations_issued() - muts0, rows_pushed
 
 
-def main(*, sharded=False, background=False):
+def main(*, sharded=False, background=False, stats=False):
     cfg = get_config("h2o-danube-1.8b").reduced()
     key = jax.random.PRNGKey(0)
     values, _ = split_params(init_model(key, cfg))
@@ -160,6 +160,10 @@ def main(*, sharded=False, background=False):
     assert tps > 0
     assert err < 1e-2
     assert muts < rows, "coalescing must batch rank-1 rows into rank-k"
+    if stats:
+        import repro.obs as obs
+
+        print(obs.summary_line())
     return tps
 
 
@@ -171,7 +175,10 @@ if __name__ == "__main__":
     ap.add_argument("--background", action="store_true",
                     help="run sidecar flushes on the service's daemon "
                          "worker (DESIGN.md §11) instead of inline")
+    ap.add_argument("--stats", action="store_true",
+                    help="print the one-line repro.obs metrics summary "
+                         "(flush percentiles, mutations, retraces) at exit")
     args = ap.parse_args()
     if args.sharded:
         ensure_host_devices(SHARDS)
-    main(sharded=args.sharded, background=args.background)
+    main(sharded=args.sharded, background=args.background, stats=args.stats)

@@ -24,6 +24,18 @@
 # resolve('auto') picked there (mosaic on TPU, portable/Triton on GPU).
 # Rows additionally tag interpret=0|1 and their own lowering= where they
 # pin one — compare trajectories only where these match.
+#
+# Observability (DESIGN.md §13): every record embeds the run's
+# repro.obs registry snapshot (obs= field) — report.py renders flush
+# p50/p99, retraces, and ladder occupancy from it. To ALSO capture a
+# Chrome trace / metrics dump of the run itself, set the exit toggles:
+#
+#   REPRO_OBS_TRACE=trace.json scripts/bench.sh --only stream
+#       # writes the span ring (flush/drain/checkpoint/warmup spans) as
+#       # Chrome trace_event JSON at exit — open in chrome://tracing or
+#       # ui.perfetto.dev
+#   REPRO_OBS_METRICS=metrics.json scripts/bench.sh
+#       # writes the full metrics snapshot (counters/gauges/histograms)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import api, backends
+from repro.obs import metrics as obs_metrics
 from repro.core import structure as _structure
 from repro.core.precision import Precision
 
@@ -175,6 +176,12 @@ class CholFactor:
 
     # -- the paper's operations --------------------------------------------
     def _mutate(self, V, sigma: int) -> "CholFactor":
+        # Trace-time count, same convention as the kernel launch counters:
+        # one per traced modification (cached re-executions are free).
+        obs_metrics.counter(
+            "repro.core.mutations",
+            op="update" if sigma > 0 else "downdate",
+            structure=self.structure, backend=self.backend).inc()
         opts = {}
         if self.backend == "sharded":
             if self.mesh is None:
@@ -224,6 +231,9 @@ class CholFactor:
         diagonal exactly when ``A - V V^T`` exits the PD cone, so the
         diagonal IS the feasibility verdict — at zero extra collectives.
         """
+        obs_metrics.counter("repro.core.guard_calls",
+                            structure=self.structure,
+                            backend=self.backend).inc()
         down = self.downdate(V)
         if self.structure != "dense":
             # Structured storage is a pytree of block arrays; the scalar

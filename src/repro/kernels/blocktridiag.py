@@ -55,13 +55,17 @@ from repro.core.structure import BlockTriDiagStorage
 from repro.kernels.cholupdate import diag_recurrence
 
 # Trace-time instrumentation: pallas_call constructions (each is one device
-# launch per execution). Tests pin this to 1 per sign block.
-_LAUNCHES_TRACED = 0
+# launch per execution). Tests pin this to 1 per sign block. Since PR 9 the
+# count lives in the ``repro.obs`` registry (series
+# ``repro.kernels.launches{module=blocktridiag}``); ``launches_traced`` is a
+# thin read-back shim.
+from repro.obs import metrics as _obs_metrics
 
 
 def launches_traced() -> int:
     """Cumulative pallas_call constructions of the block-chain kernel."""
-    return _LAUNCHES_TRACED
+    return int(_obs_metrics.value("repro.kernels.launches",
+                                  module="blocktridiag"))
 
 
 def _btd_kernel(vt_in, d_ref, o_ref, d_out, o_out, *, sigma, block, k,
@@ -111,7 +115,6 @@ def _btd_kernel(vt_in, d_ref, o_ref, d_out, o_out, *, sigma, block, k,
 @functools.partial(
     jax.jit, static_argnames=("sigma", "block", "interpret", "accum_dtype"))
 def _btd_call(d2, o2, vt, *, sigma, block, interpret, accum_dtype=None):
-    global _LAUNCHES_TRACED
     nb = d2.shape[0] // block
     wv = vt.shape[1]
     k = vt.shape[0]
@@ -127,7 +130,8 @@ def _btd_call(d2, o2, vt, *, sigma, block, interpret, accum_dtype=None):
             pl.BlockSpec(o2.shape, lambda i: (0, 0)),
         ],
     )
-    _LAUNCHES_TRACED += 1
+    _obs_metrics.counter("repro.kernels.launches",
+                         module="blocktridiag").inc()
     return pl.pallas_call(
         functools.partial(_btd_kernel, sigma=sigma, block=block, k=k,
                           nblocks=nb, accum_dtype=accum_dtype),

@@ -89,13 +89,23 @@ GRID_MODES = ("indexed", "rect")
 # Trace-time instrumentation: pallas_call constructions per lowering. The
 # per-lowering analogue of ``repro.kernels.sharded.launches_traced`` — tests
 # assert the portable path really traced a portable kernel (and exactly one
-# per rank-k update).
-_LOWERINGS_TRACED = {"mosaic": 0, "portable": 0}
+# per rank-k update). Since PR 9 the count lives in the ``repro.obs``
+# registry (series ``repro.kernels.launches{lowering=...,module=fused}``);
+# ``lowerings_traced`` is a thin read-back shim, so the registry snapshot
+# and the legacy dict can never disagree.
+from repro.obs import metrics as _obs_metrics
+
+
+def _count_lowering(lowering: str) -> None:
+    _obs_metrics.counter("repro.kernels.launches", module="fused",
+                         lowering=lowering).inc()
 
 
 def lowerings_traced() -> dict:
     """Cumulative pallas_call constructions keyed by lowering name."""
-    return dict(_LOWERINGS_TRACED)
+    return {name: int(_obs_metrics.value("repro.kernels.launches",
+                                         module="fused", lowering=name))
+            for name in ("mosaic", "portable")}
 
 
 def _fused_body(p, t, vt_in, l_ref, l_out, vt_s, t_s, c_s, s_s, *,
@@ -338,7 +348,7 @@ def _fused_call(L, vt, *, sigma, panel, panel_apply, grid_mode, interpret,
             ],
             out_specs=pl.BlockSpec((n_pad, n_pad), lambda i: (0, 0)),
         )
-        _LOWERINGS_TRACED["portable"] += 1
+        _count_lowering("portable")
         out = pl.pallas_call(
             functools.partial(
                 _portable_kernel, sigma=sigma, panel=panel, k=k,
@@ -379,7 +389,7 @@ def _fused_call(L, vt, *, sigma, panel, panel_apply, grid_mode, interpret,
                                    lambda i, pt, tt: (pt[i], tt[i])),
             scratch_shapes=scratch_shapes,
         )
-        _LOWERINGS_TRACED["mosaic"] += 1
+        _count_lowering("mosaic")
         out = pl.pallas_call(
             functools.partial(_indexed_kernel, **kw),
             grid_spec=grid_spec,
@@ -395,7 +405,7 @@ def _fused_call(L, vt, *, sigma, panel, panel_apply, grid_mode, interpret,
             # refetches nor reflushes, and the kernel body skips them.
             return (p, jnp.minimum(p + j, last))
 
-        _LOWERINGS_TRACED["mosaic"] += 1
+        _count_lowering("mosaic")
         out = pl.pallas_call(
             functools.partial(_rect_kernel, n_tiles=n_tiles, **kw),
             grid=(n_tiles, n_tiles),

@@ -50,13 +50,18 @@ from jax.experimental.pallas import tpu as pltpu
 
 # Trace-time instrumentation: how many pallas_call sites this module has
 # built. Under SPMD shard_map one traced call == one launch on every shard,
-# so the per-update delta IS the launches-per-shard-per-update count.
-_LAUNCHES_TRACED = 0
+# so the per-update delta IS the launches-per-shard-per-update count. Since
+# PR 9 the count lives in the ``repro.obs`` registry (series
+# ``repro.kernels.launches{lowering=...,module=sharded}``);
+# ``launches_traced`` is a thin read-back shim summing both lowerings.
+from repro.obs import metrics as _obs_metrics
 
 
 def launches_traced() -> int:
     """Cumulative pallas_call constructions (see module docstring)."""
-    return _LAUNCHES_TRACED
+    return sum(int(_obs_metrics.value("repro.kernels.launches",
+                                      module="sharded", lowering=lo))
+               for lo in ("mosaic", "portable"))
 
 
 def _panel_kernel(off_ref, t_ref, d_ref, vt_ref, l_ref, l_out, *, panel,
@@ -142,7 +147,6 @@ def panel_apply_sharded(L_loc, T_stack, D_stack, vt_stack, *, tile_off,
     Returns:
       The fully updated column shard, same shape as ``L_loc``.
     """
-    global _LAUNCHES_TRACED
     if lowering not in ("mosaic", "portable"):
         raise ValueError(
             f"lowering must be 'mosaic' or 'portable', got {lowering!r}")
@@ -196,7 +200,8 @@ def panel_apply_sharded(L_loc, T_stack, D_stack, vt_stack, *, tile_off,
             in_specs=in_specs,
             out_specs=out_specs,
         )
-    _LAUNCHES_TRACED += 1
+    _obs_metrics.counter("repro.kernels.launches", module="sharded",
+                         lowering=lowering).inc()
     return pl.pallas_call(
         functools.partial(_panel_kernel, panel=panel,
                           accum_dtype=accum_dtype, batched=batched),

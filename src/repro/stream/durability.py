@@ -37,6 +37,8 @@ import numpy as np
 from repro import checkpoint as ckpt
 from repro.core import CholFactor
 from repro.core.precision import Precision
+from repro.obs import metrics as obs_metrics
+from repro.obs import tracing as obs_tracing
 from repro.stream.coalescer import Coalescer
 from repro.stream.service import StreamService
 from repro.stream.store import FactorStore
@@ -131,11 +133,15 @@ class ReplayLog:
         self._fh = self.path.open("w" if truncate else "a")
 
     def append(self, record: dict) -> None:
-        self._fh.write(json.dumps(record) + "\n")
+        line = json.dumps(record) + "\n"
+        self._fh.write(line)
         # Flush through to the OS per record: a crashed *process* loses
         # nothing (fsync-per-record durability against power loss is the
         # operator's trade to make; the serving-loop default is flush).
         self._fh.flush()
+        obs_metrics.counter("repro.stream.wal_records",
+                            op=record.get("op", "seed")).inc()
+        obs_metrics.counter("repro.stream.wal_bytes").inc(len(line))
 
     def close(self) -> None:
         self._fh.close()
@@ -197,7 +203,8 @@ def checkpoint_service(svc: StreamService, ckpt_dir, step: int, *,
     # in-flight flush; requests still queued run against (and log after)
     # the rotated segment, which replay applies on top of the snapshot.
     with svc._lock:
-        return _checkpoint_locked(svc, ckpt_dir, step, keep=keep)
+        with obs_tracing.span("stream.checkpoint", step=step):
+            return _checkpoint_locked(svc, ckpt_dir, step, keep=keep)
 
 
 def _checkpoint_locked(svc: StreamService, ckpt_dir, step: int, *,
@@ -327,6 +334,11 @@ def restore_service(ckpt_dir, *, step: Optional[int] = None,
     surviving process the executable cache is metadata-shared, so a warm
     restore after warmed serving compiles nothing.
     """
+    with obs_tracing.span("stream.restore", warm=warm):
+        return _restore_service(ckpt_dir, step=step, mesh=mesh, warm=warm)
+
+
+def _restore_service(ckpt_dir, *, step, mesh, warm) -> StreamService:
     if step is None:
         step = ckpt.latest_step(ckpt_dir)
         if step is None:

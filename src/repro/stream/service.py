@@ -47,10 +47,13 @@ import dataclasses
 import heapq
 import queue
 import threading
+import time
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import tracing as obs_tracing
 from repro.stream.coalescer import Coalescer
 from repro.stream.store import FactorStore
 
@@ -72,6 +75,12 @@ class FlushReport:
         per round; 1–2 in the steady state).
       rounds: drain/apply rounds (1 unless a ring held > width rows).
       reason: 'width' | 'deadline' | 'manual' | 'force' | 'background'.
+      t_coalesce_s: host seconds spent draining rings + building the
+        zero-padded blocks (summed over rounds).
+      t_mutate_s: host seconds spent inside ``store.apply`` dispatches
+        (summed over rounds).
+      widths: padded block width (the chosen width bucket) of every
+        dispatched sign block, dispatch order.
     """
 
     absorbed: Dict[object, int] = dataclasses.field(default_factory=dict)
@@ -80,6 +89,9 @@ class FlushReport:
     mutations: int = 0
     rounds: int = 0
     reason: str = "manual"
+    t_coalesce_s: float = 0.0
+    t_mutate_s: float = 0.0
+    widths: Tuple[int, ...] = ()
 
     @property
     def empty(self) -> bool:
@@ -120,7 +132,11 @@ class _FlushWorker(threading.Thread):
             try:
                 if reqs and self.exception is None:
                     force = any(f for f, _ in reqs)
-                    self._svc._flush_sync(force=force, reason=reqs[0][1])
+                    obs_metrics.gauge("repro.stream.queue_depth").set(
+                        self.requests.qsize())
+                    with obs_tracing.span("stream.background_flush",
+                                          requests=len(reqs)):
+                        self._svc._flush_sync(force=force, reason=reqs[0][1])
             except BaseException as e:  # noqa: BLE001 — reported at drain
                 self.exception = e
             finally:
@@ -131,6 +147,8 @@ class _FlushWorker(threading.Thread):
 
     def submit(self, force: bool, reason: str) -> None:
         self.requests.put((force, reason))
+        obs_metrics.gauge("repro.stream.queue_depth").set(
+            self.requests.qsize())
 
     def stop(self) -> None:
         self.requests.put(self._STOP)
@@ -219,7 +237,8 @@ class StreamService:
         without a worker."""
         if self._worker is None:
             return ()
-        self._worker.requests.join()
+        with obs_tracing.span("stream.drain"):
+            self._worker.requests.join()
         if self._worker.exception is not None:
             exc, self._worker.exception = self._worker.exception, None
             raise self._attach_partial_reports(exc)
@@ -378,7 +397,19 @@ class StreamService:
 
     def _flush_sync(self, *, force: bool, reason: str) -> FlushReport:
         with self._lock:
-            report = self._flush_locked(force=force, reason=reason)
+            t0 = time.perf_counter()
+            with obs_tracing.span("stream.flush", reason=reason) as ev:
+                report = self._flush_locked(force=force, reason=reason)
+                ev.labels.update(reason=report.reason,
+                                 mutations=report.mutations,
+                                 rounds=report.rounds,
+                                 empty=report.empty)
+            if not report.empty:
+                # Empty flushes (nothing selected) are free no-ops; letting
+                # them into the histogram would drown the p50 in noise.
+                obs_metrics.histogram(
+                    "repro.stream.flush_seconds",
+                    reason=report.reason).observe(time.perf_counter() - t0)
             if self._worker is not None and threading.current_thread() \
                     is self._worker:
                 self._bg_reports.append(report)
@@ -421,6 +452,7 @@ class StreamService:
         store = self.store
         pending = set(selected)
         while pending and report.rounds < _MAX_FLUSH_ROUNDS:
+            t_co = time.perf_counter()
             up_rows: Dict[int, np.ndarray] = {}
             dn_rows: Dict[int, np.ndarray] = {}
             dn_users: Dict[object, int] = {}
@@ -444,17 +476,42 @@ class StreamService:
 
             Vup = store.pad_block(up_rows) if up_rows else None
             Vdn = store.pad_block(dn_rows) if dn_rows else None
+            report.t_coalesce_s += time.perf_counter() - t_co
             if Vup is None and Vdn is None:
                 break
+            for sign, blk in (("up", Vup), ("down", Vdn)):
+                if blk is not None:
+                    w = int(blk.shape[-1])
+                    report.widths += (w,)
+                    obs_metrics.histogram(
+                        "repro.stream.coalesce_width",
+                        buckets=obs_metrics.WIDTH_BUCKETS,
+                        sign=sign).observe(w)
             before = store_mod.mutations_issued()
+            traces_before = store_mod.traces_counted()
+            t_mu = time.perf_counter()
             ok = store.apply(Vup, Vdn)
+            report.t_mutate_s += time.perf_counter() - t_mu
+            # A step trace INSIDE flush dispatch means a serving-path shape
+            # missed the warmed executables — the event the PR 6 retrace
+            # guard exists to forbid. Warmup traces happen outside flushes,
+            # so they never land here.
+            retraced = store_mod.traces_counted() - traces_before
+            if retraced:
+                obs_metrics.counter("repro.stream.retraces").inc(retraced)
+                obs_tracing.instant("stream.retrace", steps=retraced,
+                                    reason=report.reason)
             report.mutations += store_mod.mutations_issued() - before
             report.rounds += 1
             if ok is not None:
                 ok_host = np.asarray(ok)
                 for u, s in dn_users.items():
+                    verdict = bool(ok_host[s])
+                    if not verdict:
+                        obs_metrics.counter("repro.stream.guard_rejects"
+                                            ).inc()
                     report.downdate_ok[u] = bool(
-                        report.downdate_ok.get(u, True) and ok_host[s])
+                        report.downdate_ok.get(u, True) and verdict)
         return report
 
     # -- reads ---------------------------------------------------------------

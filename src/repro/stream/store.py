@@ -49,6 +49,7 @@ from __future__ import annotations
 
 import contextlib
 import functools
+import time
 import warnings
 from typing import Dict, List, Optional, Tuple
 
@@ -58,6 +59,7 @@ import numpy as np
 
 from repro.core import CholFactor
 from repro.core.precision import Precision
+from repro.obs import metrics as obs_metrics
 
 
 @contextlib.contextmanager
@@ -75,34 +77,32 @@ def _quiet_donation():
         yield
 
 # Host-side instrumentation: batched rank-k mutations dispatched to the
-# engine (one per sign block per apply). See module docstring.
-_MUTATIONS_ISSUED = 0
-
-# Python traces of the step functions: each step body bumps it once per
-# trace (tracing executes the body; cached executions do not). The
-# retrace guard reads this.
-_TRACES = 0
+# engine (one per sign block per apply), and Python traces of the step
+# functions (each step body bumps once per trace — tracing executes the
+# body; cached executions do not; the retrace guard reads the latter).
+# Since PR 9 both live in the ``repro.obs`` registry
+# (``repro.stream.mutations{sign=...}`` / ``repro.stream.step_traces``);
+# ``mutations_issued``/``traces_counted`` are thin read-back shims, so the
+# registry snapshot and the legacy counters can never disagree.
 
 
 def mutations_issued() -> int:
     """Cumulative batched mutations dispatched by every store (see above)."""
-    return _MUTATIONS_ISSUED
+    return int(obs_metrics.total("repro.stream.mutations"))
 
 
 def traces_counted() -> int:
     """Cumulative step-function traces across every store — the
     compile-counter the retrace guard (warmup module) asserts against."""
-    return _TRACES
+    return int(obs_metrics.total("repro.stream.step_traces"))
 
 
-def _count_mutation(k: int = 1) -> None:
-    global _MUTATIONS_ISSUED
-    _MUTATIONS_ISSUED += k
+def _count_mutation(k: int = 1, *, sign: str = "both") -> None:
+    obs_metrics.counter("repro.stream.mutations", sign=sign).inc(k)
 
 
-def _count_trace() -> None:
-    global _TRACES
-    _TRACES += 1
+def _count_trace(step: str = "unknown") -> None:
+    obs_metrics.counter("repro.stream.step_traces", step=step).inc()
 
 
 # -- the bucket ladder --------------------------------------------------------
@@ -213,18 +213,35 @@ class StepSet:
         fn = self.compiled.get((name,) + _shape_key(args))
         if fn is None:
             self.cold_dispatches += 1
+            tier = "jitted"
             fn = self.jitted[name]
+        else:
+            tier = "compiled"
+        obs_metrics.counter("repro.stream.step_dispatch", tier=tier,
+                            step=name).inc()
         with _quiet_donation():
             return fn(*args)
 
     def compile_step(self, name: str, avals) -> bool:
         """AOT-compile ``name`` for ``avals`` (ShapeDtypeStructs); returns
-        True when a new executable was built, False on a cache hit."""
+        True when a new executable was built, False on a cache hit.
+
+        Each build's wall-clock lands in the registry histogram
+        ``repro.stream.compile_seconds{step=...,sharded=0|1}`` — the
+        per-executable compile times the aggregate ``WarmupReport.seconds``
+        used to swallow.
+        """
         key = (name,) + _shape_key(avals)
         if key in self.compiled:
             return False
+        sharded = int(any(getattr(a, "sharding", None) is not None
+                          for a in avals))
+        t0 = time.perf_counter()
         with _quiet_donation():
             self.compiled[key] = self.jitted[name].lower(*avals).compile()
+        obs_metrics.histogram("repro.stream.compile_seconds", step=name,
+                              sharded=sharded).observe(
+                                  time.perf_counter() - t0)
         return True
 
     @property
@@ -253,33 +270,33 @@ def _steps_for(panel: int, backend: str, interpret: Optional[bool],
                 precision=precision, mesh=mesh, axis=axis)
 
     def up_only(data, vup):
-        _count_trace()
+        _count_trace("up")
         return CholFactor.from_factor(data, **meta).update(vup).data
 
     def down_only(data, vdn):
-        _count_trace()
+        _count_trace("down")
         f, ok = CholFactor.from_factor(data, **meta).downdate_guarded(vdn)
         return f.data, ok
 
     def both(data, vup, vdn):
-        _count_trace()
+        _count_trace("both")
         f = CholFactor.from_factor(data, **meta).update(vup)
         f, ok = f.downdate_guarded(vdn)
         return f.data, ok
 
     def scale(data, alpha):
-        _count_trace()
+        _count_trace("scale")
         return CholFactor.from_factor(data, **meta).scale(alpha).data
 
     def slot_set(data, slot, block):
-        _count_trace()
+        _count_trace("slot_set")
         return data.at[slot].set(block.astype(data.dtype))
 
     def promote(data, fresh):
         # Rung promotion: the one amortised O(B n^2) copy, now an AOT
         # step like everything else so a ladder boundary crossed in
         # steady state does not trace.
-        _count_trace()
+        _count_trace("promote")
         return jnp.concatenate([data, fresh.astype(data.dtype)])
 
     donate = dict(donate_argnums=0)
@@ -371,6 +388,17 @@ class FactorStore:
         self._last_used: Dict[object, int] = {}
         self._steps = _steps_for(panel, backend, interpret, policy,
                                  self._mesh, _axis_key(axis))
+        self._observe_occupancy()
+
+    # -- observability -------------------------------------------------------
+    def _observe_occupancy(self) -> None:
+        """Refresh the ladder gauges after any membership/rung change:
+        occupancy (active/capacity fraction), active count, capacity."""
+        cap = self.capacity
+        obs_metrics.gauge("repro.stream.ladder_occupancy").set(
+            self.active / cap if cap else 0.0)
+        obs_metrics.gauge("repro.stream.active").set(self.active)
+        obs_metrics.gauge("repro.stream.capacity").set(cap)
 
     # -- ladder arithmetic ---------------------------------------------------
     def _rung_for(self, capacity: int) -> int:
@@ -467,6 +495,7 @@ class FactorStore:
         self._steps = _steps_for(factor.panel, factor.backend,
                                  factor.interpret, factor.precision,
                                  self._mesh, _axis_key(factor.axis))
+        self._observe_occupancy()
         return self
 
     # -- views --------------------------------------------------------------
@@ -555,6 +584,8 @@ class FactorStore:
         self._slot_of[user] = s
         self._slot_to_user[s] = user
         self._last_used[user] = tick
+        obs_metrics.counter("repro.stream.admissions").inc()
+        self._observe_occupancy()
         return s
 
     def evict(self, user) -> int:
@@ -570,6 +601,8 @@ class FactorStore:
         del self._slot_to_user[s]
         del self._last_used[user]
         self._empty_slots.append(s)
+        obs_metrics.counter("repro.stream.evictions").inc()
+        self._observe_occupancy()
         return s
 
     def _promote(self) -> None:
@@ -588,6 +621,8 @@ class FactorStore:
             "promote", self._factor.data, self._fresh_blocks(nxt - cap))
         self._factor = self._factor.replace(data=new_data)
         self._empty_slots.extend(range(nxt - 1, cap - 1, -1))
+        obs_metrics.counter("repro.stream.promotions").inc()
+        self._observe_occupancy()
 
     def compact(self, *, min_capacity: int = 1) -> Dict[object, int]:
         """Shrink the fleet to the smallest rung holding its active slots
@@ -607,6 +642,8 @@ class FactorStore:
         self._slot_of = {u: i for i, (u, _) in enumerate(order)}
         self._slot_to_user = {i: u for u, i in self._slot_of.items()}
         self._empty_slots = list(range(new_cap - 1, len(keep) - 1, -1))
+        obs_metrics.counter("repro.stream.compactions").inc()
+        self._observe_occupancy()
         return dict(self._slot_of)
 
     # -- mutations ----------------------------------------------------------
@@ -626,13 +663,13 @@ class FactorStore:
         data = self._factor.data
         ok = None
         if Vup is not None and Vdn is not None:
-            _count_mutation(2)
+            _count_mutation(2, sign="both")
             data, ok = self._steps.call("both", data, Vup, Vdn)
         elif Vup is not None:
-            _count_mutation(1)
+            _count_mutation(1, sign="up")
             data = self._steps.call("up", data, Vup)
         elif Vdn is not None:
-            _count_mutation(1)
+            _count_mutation(1, sign="down")
             data, ok = self._steps.call("down", data, Vdn)
         else:
             return None

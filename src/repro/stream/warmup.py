@@ -38,11 +38,12 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import time
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import numpy as np
 
+from repro.obs import tracing as obs_tracing
 from repro.stream import store as store_mod
 from repro.stream.store import FactorStore, fleet_sharding
 
@@ -93,6 +94,14 @@ class WarmupReport:
       rungs: ladder rungs covered.
       widths: width buckets covered.
       seconds: wall-clock spent lowering + compiling.
+      compile_seconds: per-executable-kind wall-clock breakdown, keyed by
+        step name with a ``[sharded]`` suffix for sharded-aval builds
+        (e.g. ``'both'``, ``'promote[sharded]'``). Only builds THIS call
+        performed appear — cache hits cost (and record) nothing. The same
+        timings land in the registry histogram
+        ``repro.stream.compile_seconds{step=...,sharded=0|1}``, recorded
+        by ``StepSet.compile_step`` itself so cold serving-path compiles
+        are measured identically.
       lowering: the fused-kernel lowering the compiled executables baked in
         ('mosaic'/'portable') — resolved per device kind at warmup time
         (DESIGN.md §5), so a GPU-kind warmup compiles the portable spec.
@@ -103,6 +112,8 @@ class WarmupReport:
     rungs: Tuple[int, ...] = ()
     widths: Tuple[int, ...] = ()
     seconds: float = 0.0
+    compile_seconds: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
     lowering: str = "mosaic"
 
 
@@ -149,27 +160,41 @@ def warmup_store(store: FactorStore, *,
     t0 = time.perf_counter()
 
     def build(name, avals):
+        # Label per executable kind, sharded-aval builds separately: the
+        # sharded lowerings are the expensive ones (SPMD partitioning),
+        # and the aggregate ``seconds`` used to be the only place their
+        # cost survived.
+        key = name + ("[sharded]" if any(
+            getattr(a, "sharding", None) is not None for a in avals)
+            else "")
+        t = time.perf_counter()
         if steps.compile_step(name, avals):
             report.compiled += 1
+            report.compile_seconds[key] = (
+                report.compile_seconds.get(key, 0.0)
+                + time.perf_counter() - t)
         else:
             report.cached += 1
 
-    for cap in rungs:
-        data = _aval((cap, n, n), data_dt, sharding)
-        for w in widths:
-            vw = _aval((cap, n, w), row_dt)
-            build("up", (data, vw))
-            build("down", (data, vw))
-            for w2 in widths:
-                build("both", (data, vw, _aval((cap, n, w2), row_dt)))
-        # decay's alpha travels in the fleet's row dtype (store.decay).
-        build("scale", (data, _aval((), row_dt)))
-        build("slot_set", (data, _aval((), np.int32),
-                           _aval((n, n), data_dt)))
-    for cap, nxt in zip(store.ladder, store.ladder[1:]):
-        if cap in rungs or nxt in rungs:
-            build("promote", (_aval((cap, n, n), data_dt, sharding),
-                              _aval((nxt - cap, n, n), data_dt)))
+    with obs_tracing.span("stream.warmup", rungs=len(rungs),
+                          widths=len(widths)) as ev:
+        for cap in rungs:
+            data = _aval((cap, n, n), data_dt, sharding)
+            for w in widths:
+                vw = _aval((cap, n, w), row_dt)
+                build("up", (data, vw))
+                build("down", (data, vw))
+                for w2 in widths:
+                    build("both", (data, vw, _aval((cap, n, w2), row_dt)))
+            # decay's alpha travels in the fleet's row dtype (store.decay).
+            build("scale", (data, _aval((), row_dt)))
+            build("slot_set", (data, _aval((), np.int32),
+                               _aval((n, n), data_dt)))
+        for cap, nxt in zip(store.ladder, store.ladder[1:]):
+            if cap in rungs or nxt in rungs:
+                build("promote", (_aval((cap, n, n), data_dt, sharding),
+                                  _aval((nxt - cap, n, n), data_dt)))
+        ev.labels.update(compiled=report.compiled, cached=report.cached)
 
     report.seconds = time.perf_counter() - t0
     return report
