@@ -20,7 +20,10 @@ fused batched rank-k mutations. Sweeping the coalesce width 1 -> 32 shows
   ratio rather than inferring it.
 
 The ``dtypes`` axis records the bf16-storage bytes/row halving at the
-paper's k=16 sweet spot (DESIGN.md §8). Rows land in
+paper's k=16 sweet spot (DESIGN.md §8), and the ``stream/structured/*``
+row drives a blocktridiag fleet through the same loop, recording its
+O(n·b) bytes/row and resident factor bytes against a dense fleet at
+matched n (DESIGN.md §12). Rows land in
 ``benchmarks/results/BENCH_stream.json`` via ``scripts/bench.sh``.
 
 The **latency section** (``stream/latency/*``, DESIGN.md §11) measures
@@ -46,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.precision import Precision
+from repro.kernels import blocktridiag as btd_k
 from repro.kernels import fused as fused_k
 from repro.obs import metrics as obs_metrics
 from repro.stream import FactorStore, StreamService
@@ -170,6 +174,68 @@ def latency(csv_rows, *, quick=False, tiny=False):
     return csv_rows
 
 
+def structured(csv_rows, *, quick=False):
+    """Structured-fleet axis (ISSUE 10): a blocktridiag fleet through the
+    same serving loop, against a dense fleet at matched n.
+
+    The quantities are the modeled-bandwidth accounting the O(n·b) claim
+    lives in, not interpret-mode wall-clock: ``bytes_per_row`` from the
+    block-chain kernel's tile arithmetic (every diag/off block read+written
+    once per mutation, amortized over the coalesce width) vs the dense
+    fused kernel's O(n²) traffic, and ``factor_bytes`` — resident (2nb-1)b²
+    vs n² per fleet member. The drive itself just proves the structured
+    path absorbs real traffic end to end (anchor-keyed rings, batched
+    block-chain flush) and reports the mutation count.
+    """
+    interpret = jax.default_backend() != "tpu"
+    B, nb, b, width = (2, 4, 8, 4) if quick else (4, 8, 16, 16)
+    n = nb * b
+    rng = np.random.default_rng(11)
+    R = 2 * width
+    # Block-local traffic: each row supported on one adjacent block-row
+    # pair {j, j+1} — the coalescer's push-time contract for structured
+    # fleets (DESIGN.md §9).
+    rows = np.zeros((R, B, n), np.float32)
+    for t in range(R):
+        for u in range(B):
+            j = int(rng.integers(0, max(nb - 1, 1)))
+            rows[t, u, j * b:(j + 2) * b] = (
+                0.1 * rng.normal(size=min(2 * b, n - j * b)))
+
+    store = FactorStore(n, capacity=B, width=width, panel=b,
+                        backend="blocktridiag", interpret=interpret,
+                        structure="blocktridiag", block=b)
+    svc = StreamService(store, auto_flush=False)
+    for u in range(B):
+        svc.admit(u)
+    m0 = store_mod.mutations_issued()
+    t0 = time.perf_counter()
+    for t in range(R):
+        for u in range(B):
+            svc.push(u, rows[t, u])
+        if (t + 1) % width == 0:
+            svc.flush()
+    jax.block_until_ready(jax.tree_util.tree_leaves(store.factor.data))
+    dt, muts = time.perf_counter() - t0, store_mod.mutations_issued() - m0
+
+    f32 = jnp.float32
+    btd_row = btd_k.bytes_per_update(nb, b, width, storage_dtype=f32) // width
+    dense_row = fused_k.bytes_per_update(
+        n, b, width, storage_dtype=f32) // width
+    btd_factor = btd_k.factor_bytes(nb, b, storage_dtype=f32)
+    dense_factor = n * n * 4
+    csv_rows.append(
+        (f"stream/structured/blocktridiag/B{B}n{n}b{b}w{width}",
+         dt / (B * R) * 1e6,
+         f"bytes_per_row={btd_row} dense_bytes_per_row={dense_row} "
+         f"bytes_ratio={dense_row / btd_row:.2f} "
+         f"factor_bytes={btd_factor} dense_factor_bytes={dense_factor} "
+         f"factor_ratio={dense_factor / btd_factor:.2f} "
+         f"mutations={muts} interpret={int(interpret)}")
+    )
+    return csv_rows
+
+
 def run(csv_rows, *, quick=False, dtypes=("float32",), tiny=False):
     if tiny:
         # CI smoke: the latency section alone at minimal sizes.
@@ -225,4 +291,5 @@ def run(csv_rows, *, quick=False, dtypes=("float32",), tiny=False):
              f"interpret={int(interpret)}")
         )
 
+    structured(csv_rows, quick=quick)
     return latency(csv_rows, quick=quick)

@@ -164,6 +164,11 @@ def chol_update(
     if sigma not in (1, -1):
         raise ValueError(f"sigma must be +1 or -1, got {sigma}")
     structured = _structure.is_factor_storage(L)
+    if structured and L.batched:
+        raise ValueError(
+            "batched structured storage goes through chol_update_batched "
+            f"(got {L.describe()})"
+        )
     if not structured and L.ndim == 3 and method != "sharded":
         # Only the sharded driver consumes a stacked fleet natively (it
         # folds the batch into its per-shard launch); every other backend
@@ -220,6 +225,38 @@ def chol_update_batched(
     Returns:
       (B, n, n) stacked updated factors.
     """
+    if _structure.is_factor_storage(L):
+        # A structured FLEET: batched storage leaves, (B, n, k) rows. The
+        # method resolves once against the storage's structure (same funnel
+        # as the dense batch), then vmap maps the member rule over the
+        # storage pytree — for the Pallas block-chain kernel the batch
+        # folds into the grid, so B updates still construct ONE
+        # pallas_call per sign block.
+        if not L.batched:
+            raise ValueError(
+                f"structured fleet must be batched storage, got "
+                f"{L.describe()}"
+            )
+        import jax.numpy as jnp
+
+        V = jnp.asarray(V)
+        if V.ndim == 2:
+            V = V[:, :, None]
+        if V.ndim != 3 or V.shape[0] != L.batch or V.shape[1] != L.n:
+            raise ValueError(
+                f"V must be (B, n, k) matching fleet {L.describe()}, got "
+                f"{V.shape}"
+            )
+        method = backends.resolve(method, n=L.n, panel=panel,
+                                  interpret=interpret, structure=L.structure)
+
+        def one_s(l, v):
+            return chol_update(
+                l, v, sigma=sigma, method=method, panel=panel,
+                interpret=interpret, precision=precision, **opts,
+            )
+
+        return jax.vmap(one_s)(L, V)
     if L.ndim != 3:
         raise ValueError(f"L must be (B, n, n), got shape {L.shape}")
     if V.ndim == 2:

@@ -236,11 +236,16 @@ class CholFactor:
                             backend=self.backend).inc()
         down = self.downdate(V)
         if self.structure != "dense":
-            # Structured storage is a pytree of block arrays; the scalar
-            # verdict gates every leaf.
+            # Structured storage is a pytree of block arrays; the verdict
+            # gates every leaf — scalar for one factor, (B,) broadcast over
+            # each leaf's trailing block axes for a fleet.
             ok = self.downdate_feasible(V)
-            new = jax.tree.map(lambda d, o: jnp.where(ok, d, o),
-                               down.data, self.data)
+
+            def pick(d, o):
+                mask = ok.reshape(ok.shape + (1,) * (d.ndim - ok.ndim))
+                return jnp.where(mask, d, o)
+
+            new = jax.tree.map(pick, down.data, self.data)
             return dataclasses.replace(self, data=new), ok
         if self.backend == "sharded":
             diag = jnp.diagonal(down.data, axis1=-2, axis2=-1)

@@ -145,6 +145,11 @@ class DenseStorage:
         return self.data.ndim == 3
 
     @property
+    def batch(self):
+        """Fleet size when batched, else None."""
+        return self.data.shape[0] if self.data.ndim == 3 else None
+
+    @property
     def dtype(self):
         return self.data.dtype
 
@@ -206,13 +211,16 @@ class BlockTriDiagStorage:
     """Upper block-bidiagonal factor of a block-tridiagonal SPD matrix.
 
     Attributes:
-      diag: ``(nb, b, b)`` upper-triangular diagonal blocks ``U[j, j]``.
+      diag: ``(nb, b, b)`` upper-triangular diagonal blocks ``U[j, j]``,
+        or ``(B, nb, b, b)`` for a fleet of B factors.
       off:  ``(nb-1, b, b)`` coupling blocks ``U[j, j+1]`` (the transposes
-        of the lower factor's sub-diagonal blocks).
+        of the lower factor's sub-diagonal blocks), or ``(B, nb-1, b, b)``.
 
     O(n·b) memory for ``n = nb·b`` — the layout for factors whose dense
-    ``(n, n)`` form would not fit. Not batched (a fleet of structured
-    factors is the sharded/stream follow-up, DESIGN.md §12).
+    ``(n, n)`` form would not fit. Batched (4-D leaves) storage is a fleet
+    of factors over one shared chain layout: every per-factor operation
+    vmaps over the leading axis, mirroring ``DenseStorage``'s ``(B, n, n)``
+    convention so ``FactorStore`` can hold structured members.
     """
 
     diag: jax.Array
@@ -222,11 +230,13 @@ class BlockTriDiagStorage:
 
     def __post_init__(self):
         d, o = jnp.shape(self.diag), jnp.shape(self.off)
-        if len(d) != 3 or d[1] != d[2]:
-            raise ValueError(f"diag must be (nb, b, b), got {d}")
-        if len(o) != 3 or o[1:] != d[1:] or o[0] != d[0] - 1:
+        if len(d) not in (3, 4) or d[-1] != d[-2]:
+            raise ValueError(f"diag must be (nb, b, b) or (B, nb, b, b), "
+                             f"got {d}")
+        if (len(o) != len(d) or o[-2:] != d[-2:] or o[-3] != d[-3] - 1
+                or o[:-3] != d[:-3]):
             raise ValueError(
-                f"off must be (nb-1, b, b) matching diag {d}, got {o}")
+                f"off must be (..., nb-1, b, b) matching diag {d}, got {o}")
 
     def tree_flatten(self):
         return (self.diag, self.off), None
@@ -245,7 +255,7 @@ class BlockTriDiagStorage:
     # -- metadata views -----------------------------------------------------
     @property
     def nblocks(self) -> int:
-        return self.diag.shape[0]
+        return self.diag.shape[-3]
 
     @property
     def block(self) -> int:
@@ -257,7 +267,12 @@ class BlockTriDiagStorage:
 
     @property
     def batched(self) -> bool:
-        return False
+        return self.diag.ndim == 4
+
+    @property
+    def batch(self):
+        """Fleet size when batched, else None."""
+        return self.diag.shape[0] if self.batched else None
 
     @property
     def dtype(self):
@@ -266,6 +281,14 @@ class BlockTriDiagStorage:
     @property
     def raw(self):
         return self
+
+    def _per(self, fn, *args):
+        """vmap ``fn(unbatched_storage, *args)`` over the fleet axis."""
+        if self.batched:
+            return jax.vmap(
+                lambda d, o, *a: fn(BlockTriDiagStorage(d, o), *a)
+            )(self.diag, self.off, *args)
+        return fn(self, *args)
 
     # -- constructors -------------------------------------------------------
     @classmethod
@@ -312,11 +335,15 @@ class BlockTriDiagStorage:
 
     @classmethod
     def identity(cls, nb: int, block: int, *, scale: float = 1.0,
-                 dtype=jnp.float32) -> "BlockTriDiagStorage":
-        """Factor of ``scale * I`` in block form (the warm start)."""
+                 dtype=jnp.float32, batch=None) -> "BlockTriDiagStorage":
+        """Factor of ``scale * I`` in block form (the warm start). With
+        ``batch=B`` the fleet variant: B identical members, 4-D leaves."""
         eye = jnp.sqrt(jnp.asarray(scale, dtype)) * jnp.eye(block, dtype=dtype)
-        return cls(jnp.broadcast_to(eye, (nb, block, block)),
-                   jnp.zeros((max(nb - 1, 0), block, block), dtype))
+        dshape = (nb, block, block)
+        oshape = (max(nb - 1, 0), block, block)
+        if batch is not None:
+            dshape, oshape = (batch,) + dshape, (batch,) + oshape
+        return cls(jnp.broadcast_to(eye, dshape), jnp.zeros(oshape, dtype))
 
     def blocks_like(self, dense) -> "BlockTriDiagStorage":
         """Extract this storage's block pattern from a dense (n, n) matrix,
@@ -328,9 +355,11 @@ class BlockTriDiagStorage:
 
     # -- densification (diagnostics / tests / tangent lift only) ------------
     def to_dense(self):
-        """The (n, n) upper factor — O(n²) memory, diagnostics only; the
-        modification path never calls this (asserted via jaxpr inspection
-        in tests/test_structure.py)."""
+        """The (n, n) / (B, n, n) upper factor — O(n²) memory, diagnostics
+        only; the modification path never calls this (asserted via jaxpr
+        inspection in tests/test_structure.py)."""
+        if self.batched:
+            return self._per(lambda s: s.to_dense())
         b, nb = self.block, self.nblocks
         out = jnp.zeros((self.n, self.n), self.dtype)
         for j in range(nb):
@@ -351,13 +380,14 @@ class BlockTriDiagStorage:
         structured counterpart of ``matrix()``."""
         ad = _mT(self.diag) @ self.diag
         if self.nblocks > 1:
-            ad = ad.at[1:].add(_mT(self.off) @ self.off)
-        ao = _mT(self.diag[:-1]) @ self.off
+            ad = ad.at[..., 1:, :, :].add(_mT(self.off) @ self.off)
+        ao = _mT(self.diag[..., :-1, :, :]) @ self.off
         return ad, ao
 
     # -- layout-specific operations -----------------------------------------
     def diagonal(self):
-        return jnp.diagonal(self.diag, axis1=-2, axis2=-1).reshape(-1)
+        d = jnp.diagonal(self.diag, axis1=-2, axis2=-1)
+        return d.reshape(d.shape[:-2] + (-1,))
 
     def _blocks_of(self, rhs):
         """(n, ...) -> (nb, b, ...) block view of a right-hand side."""
@@ -374,6 +404,9 @@ class BlockTriDiagStorage:
         One lax.scan over the block chain either way — O(nb·b²·m) work,
         never a dense (n, n) operand.
         """
+        if self.batched:
+            return self._per(
+                lambda s, rhs: s.solve_triangular(rhs, trans=trans), b)
         b = jnp.asarray(b)
         bb = self._blocks_of(b)
         st = jax.scipy.linalg.solve_triangular
@@ -406,14 +439,17 @@ class BlockTriDiagStorage:
         return self.solve_triangular(y, trans=False)
 
     def logdet(self):
-        return 2.0 * jnp.sum(jnp.log(self.diagonal()))
+        return 2.0 * jnp.sum(jnp.log(self.diagonal()), axis=-1)
 
     def is_valid(self, *, tol: float = 0.0):
-        return jnp.all(self.diagonal() > tol)
+        return jnp.all(self.diagonal() > tol, axis=-1)
 
     def downdate_feasible(self, V):
         """Same criterion as the dense path (``I - P^T P`` PD for
-        ``U^T P = V``) — the forward substitution keeps it O(n·b·k)."""
+        ``U^T P = V``) — the forward substitution keeps it O(n·b·k).
+        Batched storage takes (B, n, k) V and returns (B,) verdicts."""
+        if self.batched:
+            return self._per(lambda s, v: s.downdate_feasible(v), V)
         if V.ndim == 1:
             V = V[:, None]
         P = self.solve_triangular(V, trans=True)
@@ -425,6 +461,8 @@ class BlockTriDiagStorage:
                                    self.off.astype(dtype))
 
     def describe(self) -> str:
+        if self.batched:
+            return f"blocktridiag[{self.batch}x{self.nblocks}x{self.block}]"
         return f"blocktridiag[{self.nblocks}x{self.block}]"
 
 
@@ -469,6 +507,32 @@ def assert_blocklocal(V, block: int):
                 f"column {m} of V spans block rows {first}..{last}; the "
                 "block-tridiagonal modification contract allows one "
                 "adjacent pair (A ± v v^T would leave the storage class)")
+
+
+def anchor_block(v, block: int):
+    """Anchor block-row of a block-local rank-1 row: the FIRST block row
+    its support touches (a row supported on pair {j, j+1} anchors at j).
+
+    Validates the block-local contract on the way (raises the same
+    ``ValueError`` as ``assert_blocklocal``); returns ``None`` for an
+    all-zero row, which is block-local trivially and anchors nowhere.
+    Host-side only — the coalescer keys structured rows by this value at
+    ``push()`` time so a contract violation fails at ingest, not inside
+    the kernel.
+    """
+    import numpy as np
+
+    v = np.asarray(v).reshape(-1)
+    nz = np.nonzero(v)[0]
+    if nz.size == 0:
+        return None
+    first, last = int(nz[0]) // block, int(nz[-1]) // block
+    if last - first > 1:
+        raise ValueError(
+            f"column 0 of V spans block rows {first}..{last}; the "
+            "block-tridiagonal modification contract allows one "
+            "adjacent pair (A ± v v^T would leave the storage class)")
+    return first
 
 
 def chol_update_blocktridiag_ref(S, V, *, sigma: int = 1, precision=None,

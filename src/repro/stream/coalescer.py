@@ -96,10 +96,18 @@ class RingBuffer:
 
 @dataclasses.dataclass
 class DrainResult:
-    """One sign-scheduled drain: the update block, then the downdate block."""
+    """One sign-scheduled drain: the update block, then the downdate block.
+
+    ``up_anchors``/``down_anchors`` carry each row's anchor block-row
+    (``repro.core.structure.anchor_block``) when the coalescer was keyed
+    to a structured factor's block size; ``None`` for dense coalescers.
+    Anchors ride in ring order, aligned row-for-row with the blocks.
+    """
 
     up: np.ndarray    # (k_up, n) rows, arrival order (may be empty)
     down: np.ndarray  # (k_dn, n) rows, arrival order (may be empty)
+    up_anchors: Optional[Tuple[Optional[int], ...]] = None
+    down_anchors: Optional[Tuple[Optional[int], ...]] = None
 
     @property
     def empty(self) -> bool:
@@ -118,33 +126,62 @@ class Coalescer:
       deadline: optional staleness bound in ticks — ``expired(tick)`` is
         True once the oldest pending row has waited ``deadline`` ticks.
       dtype: host buffer dtype (rows are cast on push).
+      block: block size b of the target factor's ``BlockTriDiagStorage``
+        (None for dense factors). When set, every pushed row is keyed to
+        its anchor block (``repro.core.structure.anchor_block``) at
+        ``push()`` time — a row violating the block-local contract raises
+        HERE, at ingest, instead of corrupting the storage class inside
+        the kernel rounds later. Anchors travel with the drained blocks
+        (``DrainResult.up_anchors`` / ``down_anchors``).
     """
 
     def __init__(self, n: int, *, width: int = DEFAULT_WIDTH,
                  capacity: Optional[int] = None,
-                 deadline: Optional[int] = None, dtype=np.float32):
+                 deadline: Optional[int] = None, dtype=np.float32,
+                 block: Optional[int] = None):
         if width < 1:
             raise ValueError(f"width must be >= 1, got {width}")
+        if block is not None and (block < 1 or n % int(block)):
+            raise ValueError(
+                f"block= must divide n={n}, got block={block}")
         self.n = n
         self.width = width
         self.deadline = deadline
+        self.block = int(block) if block is not None else None
         cap = 2 * width if capacity is None else capacity
         if cap < width:
             raise ValueError(f"capacity {cap} < width {width}")
         self._up = RingBuffer(n, cap, dtype)
         self._down = RingBuffer(n, cap, dtype)
+        # Anchor queues ride beside the rings in the same FIFO order
+        # (plain lists: drains pop from the front, pushes append).
+        self._up_anchors: list = []
+        self._down_anchors: list = []
         self._first_tick: Optional[int] = None
+
+    def _anchor_of(self, v) -> Optional[int]:
+        """The row's anchor block under the block-local contract, or None
+        when this coalescer feeds a dense factor (no contract to key)."""
+        if self.block is None:
+            return None
+        from repro.core.structure import anchor_block
+
+        return anchor_block(v, self.block)
 
     # -- push ---------------------------------------------------------------
     def push_update(self, v, *, tick: int = 0) -> None:
         """Buffer a rank-1 update row (``+ v v^T`` at the next flush)."""
+        anchor = self._anchor_of(v)  # contract check BEFORE mutating state
         self._up.push(v)
+        self._up_anchors.append(anchor)
         if self._first_tick is None:
             self._first_tick = tick
 
     def push_downdate(self, v, *, tick: int = 0) -> None:
         """Buffer a rank-1 downdate row (``- v v^T`` at the next flush)."""
+        anchor = self._anchor_of(v)
         self._down.push(v)
+        self._down_anchors.append(anchor)
         if self._first_tick is None:
             self._first_tick = tick
 
@@ -196,7 +233,16 @@ class Coalescer:
         staleness clock restarts at ``tick`` when anything remains.
         """
         lim = self.width if limit is None else limit
-        res = DrainResult(up=self._up.drain(lim), down=self._down.drain(lim))
+        up = self._up.drain(lim)
+        down = self._down.drain(lim)
+        if self.block is None:
+            ua = da = None
+        else:
+            ua = tuple(self._up_anchors[:up.shape[0]])
+            da = tuple(self._down_anchors[:down.shape[0]])
+        del self._up_anchors[:up.shape[0]]
+        del self._down_anchors[:down.shape[0]]
+        res = DrainResult(up=up, down=down, up_anchors=ua, down_anchors=da)
         self._first_tick = tick if self.pending else None
         return res
 
@@ -210,7 +256,32 @@ class Coalescer:
         return self._first_tick
 
     # -- single-factor convenience ------------------------------------------
-    def flush_into(self, factor):
+    def _pad_sign_block(self, rows: np.ndarray, pad_to: Optional[int],
+                        factor_block: Optional[int]) -> np.ndarray:
+        """``(k, n)`` rows -> ``(n, >=k)`` V, zero-padded to ``pad_to``
+        columns for shape-stable dispatch.
+
+        Padding is storage-aware: the pad is zero COLUMNS of V — exact
+        no-ops for both signs and trivially block-local (an all-zero
+        column has no support, so it anchors nowhere) — never zero ROWS
+        of a densified (n, n) carrier. A structured flush with a
+        contract-keyed coalescer therefore pads without leaving the
+        storage class; an un-keyed coalescer (``block=None``) flushing a
+        structured factor re-validates the REAL columns here so the
+        contract still fails at the flush boundary, not in the kernel.
+        """
+        V = rows.T  # (n, k)
+        if factor_block is not None and self.block is None:
+            from repro.core.structure import assert_blocklocal
+
+            if V.shape[1]:
+                assert_blocklocal(V, factor_block)
+        if pad_to is not None and V.shape[1] < pad_to:
+            pad = np.zeros((self.n, pad_to - V.shape[1]), V.dtype)
+            V = np.concatenate([V, pad], axis=1)
+        return V
+
+    def flush_into(self, factor, *, pad_to: Optional[int] = None):
         """Drain and absorb into a single (non-batched) ``CholFactor``.
 
         Returns ``(factor', ok)``: the update block is applied first as one
@@ -218,17 +289,28 @@ class Coalescer:
         (``ok`` is True when no downdate was pending). The fleet path lives
         in ``repro.stream.store.FactorStore``; this is the one-factor
         analogue for scripts and tests.
+
+        ``pad_to``: zero-pad each non-empty sign block to this many
+        columns (a width bucket) so mixed-width flushes share one
+        executable shape. The pad is always zero V-columns — exact no-ops
+        and block-local for structured factors (see ``_pad_sign_block``)
+        — so shape stabilisation never densifies a structured flush.
         """
         import jax.numpy as jnp
 
+        structured = getattr(factor, "structure", "dense") != "dense"
+        fblock = factor.storage.block if structured else None
         blocks = self.drain()
         ok = True
         if blocks.up.shape[0]:
-            factor = factor.update(jnp.asarray(blocks.up.T))
+            V = self._pad_sign_block(blocks.up, pad_to, fblock)
+            factor = factor.update(jnp.asarray(V))
         if blocks.down.shape[0]:
-            factor, ok = factor.downdate_guarded(jnp.asarray(blocks.down.T))
+            V = self._pad_sign_block(blocks.down, pad_to, fblock)
+            factor, ok = factor.downdate_guarded(jnp.asarray(V))
         return factor, ok
 
     def __repr__(self):
-        return (f"Coalescer(n={self.n}, width={self.width}, "
+        key = f", block={self.block}" if self.block is not None else ""
+        return (f"Coalescer(n={self.n}, width={self.width}{key}, "
                 f"pending_up={self._up.count}, pending_down={self._down.count})")

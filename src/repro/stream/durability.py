@@ -31,6 +31,7 @@ import os
 from pathlib import Path
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -237,6 +238,12 @@ def _checkpoint_locked(svc: StreamService, ckpt_dir, step: int, *,
 
     extra = {"stream": {
         "n": store.n,
+        # Storage-kind record (absent in pre-structure checkpoints, which
+        # restore as dense — the compat default): a structured fleet's
+        # block stacks must never be reinterpreted as a dense (B, n, n)
+        # fleet by shape accident, so restore keys the template on this.
+        "structure": store.structure,
+        "block": store.block,
         "width": store.width,
         "widths": list(store.widths),
         "capacity": store.capacity,
@@ -351,12 +358,34 @@ def _restore_service(ckpt_dir, *, step, mesh, warm) -> StreamService:
             "by checkpoint_service?")
 
     dtype = _np_dtype(s["dtype"])
-    template = {"fleet": np.zeros((s["capacity"], s["n"], s["n"]), dtype)}
+    # The fleet template mirrors the recorded storage kind. Checkpoints
+    # from before the record restore as dense (compat default); a
+    # structured checkpoint read with a dense template — or any stale
+    # reader that drops this branch — fails loudly inside ckpt.restore
+    # (the block-stack leaf names do not match a dense 'fleet' leaf)
+    # instead of reinterpreting block stacks as a dense fleet.
+    structure = s.get("structure", "dense")
+    cap = s["capacity"]
+    if structure == "dense":
+        template = {"fleet": np.zeros((cap, s["n"], s["n"]), dtype)}
+    elif structure == "blocktridiag":
+        from repro.core.structure import BlockTriDiagStorage
+
+        b = int(s["block"])
+        nb = s["n"] // b
+        template = {"fleet": BlockTriDiagStorage(
+            np.zeros((cap, nb, b, b), dtype),
+            np.zeros((cap, max(nb - 1, 0), b, b), dtype))}
+    else:
+        raise ValueError(
+            f"checkpoint step {step} records fleet structure "
+            f"{structure!r}, which this reader does not support "
+            "(supported: 'dense', 'blocktridiag')")
     data = ckpt.restore(ckpt_dir, step, template)["fleet"]
     mesh, axis = _mesh_from_json(s.get("mesh"), mesh=mesh)
     factor = CholFactor.from_factor(
-        jnp.asarray(data), panel=s["panel"], backend=s["backend"],
-        interpret=s["interpret"],
+        jax.tree.map(jnp.asarray, data), panel=s["panel"],
+        backend=s["backend"], interpret=s["interpret"],
         precision=_precision_from_json(s["precision"]),
         mesh=mesh, axis=axis)
     store = FactorStore.from_state(
@@ -384,7 +413,8 @@ def _restore_service(ckpt_dir, *, step, mesh, warm) -> StreamService:
         # already-admitted user its (empty) coalescer directly.
         svc._coalescers[u] = Coalescer(
             store.n, width=store.width, capacity=svc._ring_capacity,
-            deadline=svc.deadline, dtype=store.row_dtype)
+            deadline=svc.deadline, dtype=store.row_dtype,
+            block=store.block)
 
     wal_path = Path(ckpt_dir) / s["wal"]
     svc._replaying = True

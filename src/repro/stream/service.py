@@ -290,10 +290,13 @@ class StreamService:
             known = user in self._coalescers
             slot = self.store.admit(user, scale=scale, tick=self.tick_count)
             if not known:
+                # block= keys the ring to the fleet's storage contract: a
+                # structured fleet's rows are anchor-validated at push
+                # time (None for dense fleets — no contract to enforce).
                 self._coalescers[user] = Coalescer(
                     self.store.n, width=self.store.width,
                     capacity=self._ring_capacity, deadline=self.deadline,
-                    dtype=self.store.row_dtype)
+                    dtype=self.store.row_dtype, block=self.store.block)
                 self._log({"op": "admit", "user": user, "scale": scale})
             return slot
 

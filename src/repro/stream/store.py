@@ -58,6 +58,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import CholFactor
+from repro.core import structure as _structure
 from repro.core.precision import Precision
 from repro.obs import metrics as obs_metrics
 
@@ -113,6 +114,24 @@ def _count_trace(step: str = "unknown") -> None:
 DEFAULT_LADDER = (64, 128, 256, 512, 1024, 2048)
 
 _DERIVED_RUNGS = 8  # capacity -> (c, 2c, 4c, ... c*2^7)
+
+
+#: Storage structures the stream stack can hold as fleet members. The
+#: coalescer/flush path is layout-agnostic (rows are dense (n,) vectors
+#: either way); what a structure needs to qualify is batched storage
+#: (4-D block stacks here) plus a batched engine path in
+#: ``api.chol_update_batched``.
+SUPPORTED_STRUCTURES = ("dense", "blocktridiag")
+
+
+class UnsupportedStorageError(TypeError):
+    """A fleet/storage layout the stream stack does not support.
+
+    Raised UP FRONT — at store construction or ``from_state`` — naming the
+    offending layout and the supported set, matching the
+    ``backends.resolve`` rejection discipline (a structured fleet must
+    never fail deep inside a step trace with a shape error).
+    """
 
 
 class LadderFullError(RuntimeError):
@@ -182,8 +201,13 @@ def fleet_sharding(mesh, axis):
 
 
 def _shape_key(args) -> tuple:
-    """Hashable (shape, dtype) signature of concrete args or avals."""
-    return tuple((tuple(np.shape(a)), jnp.dtype(a.dtype).name) for a in args)
+    """Hashable (treedef, leaf shape/dtype) signature of concrete args or
+    avals. Flattening makes storage pytrees (structured fleets) key by
+    their leaves, so an aval-compiled executable and the concrete call
+    agree on the same key."""
+    leaves, treedef = jax.tree_util.tree_flatten(args)
+    return (treedef,) + tuple(
+        (tuple(np.shape(a)), jnp.dtype(a.dtype).name) for a in leaves)
 
 
 class StepSet:
@@ -235,7 +259,7 @@ class StepSet:
         if key in self.compiled:
             return False
         sharded = int(any(getattr(a, "sharding", None) is not None
-                          for a in avals))
+                          for a in jax.tree_util.tree_leaves(avals)))
         t0 = time.perf_counter()
         with _quiet_donation():
             self.compiled[key] = self.jitted[name].lower(*avals).compile()
@@ -289,15 +313,21 @@ def _steps_for(panel: int, backend: str, interpret: Optional[bool],
         return CholFactor.from_factor(data, **meta).scale(alpha).data
 
     def slot_set(data, slot, block):
+        # tree.map over the fleet value: one array for a dense fleet, the
+        # (diag, off) block stacks for a structured one — each leaf's slot
+        # row is replaced by the member block's matching leaf.
         _count_trace("slot_set")
-        return data.at[slot].set(block.astype(data.dtype))
+        return jax.tree.map(
+            lambda d, b: d.at[slot].set(b.astype(d.dtype)), data, block)
 
     def promote(data, fresh):
         # Rung promotion: the one amortised O(B n^2) copy, now an AOT
         # step like everything else so a ladder boundary crossed in
         # steady state does not trace.
         _count_trace("promote")
-        return jnp.concatenate([data, fresh.astype(data.dtype)])
+        return jax.tree.map(
+            lambda d, f: jnp.concatenate([d, f.astype(d.dtype)]),
+            data, fresh)
 
     donate = dict(donate_argnums=0)
     out = None
@@ -345,6 +375,11 @@ class FactorStore:
         (the ridge/eps warm start).
       dtype: logical dtype of the fleet (storage dtype under a precision
         policy).
+      structure: member storage layout — 'dense' (default, ``(B, n, n)``)
+        or 'blocktridiag' (``(B, nb, b, b)`` block stacks, O(n·b) per
+        member; requires ``block=``). Unsupported layouts raise
+        ``UnsupportedStorageError`` HERE, before any step traces.
+      block: block size b for 'blocktridiag' (must divide n).
     """
 
     def __init__(self, n: int, *, capacity: int = 8, width: int = 16,
@@ -353,7 +388,8 @@ class FactorStore:
                  panel: int = 64, backend: str = "auto",
                  interpret: Optional[bool] = None, precision=None,
                  mesh=None, axis="model",
-                 init_scale: float = 1.0, dtype=jnp.float32):
+                 init_scale: float = 1.0, dtype=jnp.float32,
+                 structure: str = "dense", block: Optional[int] = None):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         if backend == "sharded" and mesh is None:
@@ -365,6 +401,26 @@ class FactorStore:
             raise ValueError(
                 f"mesh= placement requires backend='sharded' "
                 f"(got backend={backend!r})")
+        if structure not in SUPPORTED_STRUCTURES:
+            raise UnsupportedStorageError(
+                f"fleet structure {structure!r} is not supported by the "
+                f"stream stack; supported: {SUPPORTED_STRUCTURES}")
+        if structure == "blocktridiag":
+            if block is None or n % int(block):
+                raise ValueError(
+                    f"structure='blocktridiag' requires block= dividing "
+                    f"n={n}, got block={block}")
+            if mesh is not None:
+                raise UnsupportedStorageError(
+                    "structured fleets do not compose with mesh= placement "
+                    "yet (block-chain halo sharding is the open ROADMAP "
+                    "item); supported sharded structure: 'dense'")
+            # Same up-front rejection funnel as a single structured factor:
+            # an explicit dense-only backend must fail here by name, and
+            # 'auto' must resolve to a structured-capable method.
+            from repro.core import backends as _backends
+            _backends.resolve(backend, n=n, panel=panel, interpret=interpret,
+                              structure="blocktridiag")
         self.ladder = (_validate_ladder(ladder) if ladder is not None
                        else ladder_from(capacity))
         capacity = self._rung_for(capacity)
@@ -378,8 +434,11 @@ class FactorStore:
         self._mesh = mesh if backend == "sharded" else None
         self._axis = axis
         self._storage = storage
+        self._structure = structure
+        self._block = int(block) if structure == "blocktridiag" else None
         self._factor = CholFactor.from_factor(
-            self._place(jnp.asarray(self._fresh_blocks(capacity))),
+            self._place(jax.tree.map(jnp.asarray,
+                                     self._fresh_blocks(capacity))),
             panel=panel, backend=backend, interpret=interpret,
             precision=policy, mesh=self._mesh, axis=axis)
         self._slot_of: Dict[object, int] = {}
@@ -410,20 +469,37 @@ class FactorStore:
             f"{capacity} slots exceed the top ladder rung "
             f"{self.ladder[-1]} (ladder={self.ladder})")
 
-    def _fresh_blocks(self, count: int) -> np.ndarray:
+    def _fresh_member(self, scale: Optional[float] = None):
+        """ONE warm-start factor ``sqrt(scale) * I`` in the fleet's member
+        layout: an (n, n) eye for dense, the identity's (nb, b, b) /
+        (nb-1, b, b) block stacks for blocktridiag — never a densified
+        intermediate. Host-side numpy either way."""
+        calc = row_dtype_for(self._storage)
+        root = np.sqrt(self.init_scale if scale is None else float(scale),
+                       dtype=calc)
+        if self._structure == "blocktridiag":
+            b = self._block
+            nb = self.n // b
+            eye = (root * np.eye(b, dtype=calc)).astype(self._storage)
+            return _structure.BlockTriDiagStorage(
+                np.broadcast_to(eye, (nb, b, b)),
+                np.zeros((max(nb - 1, 0), b, b), self._storage))
+        return (root * np.eye(self.n, dtype=calc)).astype(self._storage)
+
+    def _fresh_blocks(self, count: int):
         """``count`` stacked warm-start factors ``sqrt(init_scale) * I``,
         built host-side: the serving path stays free of eager device ops
-        (everything it dispatches is a pre-compiled step)."""
+        (everything it dispatches is a pre-compiled step). Dense fleets
+        get a (count, n, n) eye stack; structured fleets get the member
+        block stacks broadcast over a leading fleet axis."""
         # Compute in the fleet's row dtype, not a hardcoded f32: an f64
         # fleet must not round its init scalar through float32 (bf16/f32
         # fleets keep f32 arithmetic — bit-identical to before). Derived
         # from _storage, not the row_dtype property: the constructor calls
         # this before self._factor exists.
-        calc = row_dtype_for(self._storage)
-        eye = np.sqrt(self.init_scale, dtype=calc) * np.eye(
-            self.n, dtype=calc)
-        return np.broadcast_to(
-            eye.astype(self._storage), (count, self.n, self.n))
+        member = self._fresh_member()
+        return jax.tree.map(
+            lambda m: np.broadcast_to(m, (count,) + m.shape), member)
 
     # -- sharded placement ---------------------------------------------------
     def _place(self, data):
@@ -458,9 +534,21 @@ class FactorStore:
         one. Omitted (pre-slot-map checkpoints), the order falls back to
         descending slot index.
         """
+        storage = factor.storage
+        if factor.structure not in SUPPORTED_STRUCTURES:
+            # Typed, up-front, names the class and the supported set —
+            # not a shape error three steps later.
+            raise UnsupportedStorageError(
+                f"fleet factor holds {type(factor.data).__name__} "
+                f"(structure {factor.structure!r}), which the stream "
+                f"stack does not support; supported structures: "
+                f"{SUPPORTED_STRUCTURES}")
         if not factor.batched:
-            raise ValueError("fleet factor must be batched (B, n, n)")
-        cap = factor.data.shape[0]
+            raise UnsupportedStorageError(
+                f"fleet factor must be batched — (B, n, n) dense or a "
+                f"batched BlockTriDiagStorage with (B, nb, b, b) block "
+                f"stacks; got {storage.describe()}")
+        cap = storage.batch
         self = cls.__new__(cls)
         self.n = factor.n
         self.width = width
@@ -475,6 +563,9 @@ class FactorStore:
         self._mesh = factor.mesh if factor.backend == "sharded" else None
         self._axis = factor.axis
         self._storage = jnp.dtype(factor.dtype)
+        self._structure = factor.structure
+        self._block = (storage.block if factor.structure == "blocktridiag"
+                       else None)
         self._factor = factor.replace(data=self._place(factor.data))
         self._slot_of = dict(slots)
         self._slot_to_user = {s: u for u, s in self._slot_of.items()}
@@ -506,7 +597,19 @@ class FactorStore:
 
     @property
     def capacity(self) -> int:
-        return self._factor.data.shape[0]
+        return self._factor.storage.batch
+
+    @property
+    def structure(self) -> str:
+        """Member storage layout: 'dense' or 'blocktridiag'."""
+        return self._structure
+
+    @property
+    def block(self) -> Optional[int]:
+        """Block size b of a blocktridiag fleet, None for dense. The
+        coalescer's block-local contract key (service threads it into
+        every per-user ring)."""
+        return self._block
 
     @property
     def empty_slots(self) -> Tuple[int, ...]:
@@ -550,7 +653,39 @@ class FactorStore:
 
     def factor_for(self, user) -> CholFactor:
         """A single-user view (shares the fleet's execution metadata)."""
-        return self._factor.replace(data=self._factor.data[self.slot(user)])
+        s = self.slot(user)
+        member = jax.tree.map(lambda x: x[s], self._factor.data)
+        return self._factor.replace(data=member)
+
+    # -- aval views (AOT warmup lowers against these) ------------------------
+    def fleet_aval(self, capacity: int, *, sharding=None):
+        """The aval (pytree of ShapeDtypeStructs) of a ``capacity``-member
+        fleet — what the donated steps take as their fleet argument.
+        ``sharding`` applies to dense fleets only (structured fleets
+        reject mesh placement at construction)."""
+        if self._structure == "blocktridiag":
+            b = self._block
+            nb = self.n // b
+            return _structure.BlockTriDiagStorage.tree_unflatten(None, (
+                jax.ShapeDtypeStruct((capacity, nb, b, b), self._storage),
+                jax.ShapeDtypeStruct((capacity, max(nb - 1, 0), b, b),
+                                     self._storage)))
+        if sharding is not None:
+            return jax.ShapeDtypeStruct((capacity, self.n, self.n),
+                                        self._storage, sharding=sharding)
+        return jax.ShapeDtypeStruct((capacity, self.n, self.n),
+                                    self._storage)
+
+    def member_aval(self):
+        """The aval of ONE member block (the ``slot_set`` payload)."""
+        if self._structure == "blocktridiag":
+            b = self._block
+            nb = self.n // b
+            return _structure.BlockTriDiagStorage.tree_unflatten(None, (
+                jax.ShapeDtypeStruct((nb, b, b), self._storage),
+                jax.ShapeDtypeStruct((max(nb - 1, 0), b, b),
+                                     self._storage)))
+        return jax.ShapeDtypeStruct((self.n, self.n), self._storage)
 
     # -- warmup (AOT executables) --------------------------------------------
     def warmup(self, **kw):
@@ -573,13 +708,11 @@ class FactorStore:
         if not self._empty_slots:
             self._promote()
         s = self._empty_slots.pop()
-        calc = self.row_dtype  # same init arithmetic dtype as _fresh_blocks
-        block = np.sqrt(
-            self.init_scale if scale is None else float(scale),
-            dtype=calc) * np.eye(self.n, dtype=calc)
+        # Warm-start member in the fleet's own layout (dense eye or
+        # identity block stacks) — same init arithmetic as _fresh_blocks.
+        member = self._fresh_member(scale)
         new_data = self._steps.call(
-            "slot_set", self._factor.data, np.int32(s),
-            block.astype(self._storage))
+            "slot_set", self._factor.data, np.int32(s), member)
         self._factor = self._factor.replace(data=new_data)
         self._slot_of[user] = s
         self._slot_to_user[s] = user
@@ -637,7 +770,8 @@ class FactorStore:
         keep = [s for _, s in order]
         new_cap = self._rung_for(max(len(keep), min_capacity))
         idx = keep + [0] * (new_cap - len(keep))  # pad slots: reset on admit
-        data = self._factor.data[jnp.asarray(idx, jnp.int32)]
+        gather = jnp.asarray(idx, jnp.int32)
+        data = jax.tree.map(lambda x: x[gather], self._factor.data)
         self._factor = self._factor.replace(data=self._place(data))
         self._slot_of = {u: i for i, (u, _) in enumerate(order)}
         self._slot_to_user = {i: u for u, i in self._slot_of.items()}

@@ -145,7 +145,6 @@ def warmup_store(store: FactorStore, *,
         if r not in store.ladder:
             raise ValueError(f"rung {r} is not on the ladder {store.ladder}")
     n = store.n
-    data_dt = store.factor.dtype
     row_dt = store.row_dtype
     sharding = (fleet_sharding(store._mesh, store._axis)
                 if store._mesh is not None else None)
@@ -165,7 +164,8 @@ def warmup_store(store: FactorStore, *,
         # and the aggregate ``seconds`` used to be the only place their
         # cost survived.
         key = name + ("[sharded]" if any(
-            getattr(a, "sharding", None) is not None for a in avals)
+            getattr(a, "sharding", None) is not None
+            for a in jax.tree_util.tree_leaves(avals))
             else "")
         t = time.perf_counter()
         if steps.compile_step(name, avals):
@@ -179,7 +179,10 @@ def warmup_store(store: FactorStore, *,
     with obs_tracing.span("stream.warmup", rungs=len(rungs),
                           widths=len(widths)) as ev:
         for cap in rungs:
-            data = _aval((cap, n, n), data_dt, sharding)
+            # The fleet aval comes from the store — a dense (cap, n, n)
+            # array or a structured pytree of block-stack avals — so one
+            # warmup loop covers every storage layout the store supports.
+            data = store.fleet_aval(cap, sharding=sharding)
             for w in widths:
                 vw = _aval((cap, n, w), row_dt)
                 build("up", (data, vw))
@@ -189,11 +192,11 @@ def warmup_store(store: FactorStore, *,
             # decay's alpha travels in the fleet's row dtype (store.decay).
             build("scale", (data, _aval((), row_dt)))
             build("slot_set", (data, _aval((), np.int32),
-                               _aval((n, n), data_dt)))
+                               store.member_aval()))
         for cap, nxt in zip(store.ladder, store.ladder[1:]):
             if cap in rungs or nxt in rungs:
-                build("promote", (_aval((cap, n, n), data_dt, sharding),
-                                  _aval((nxt - cap, n, n), data_dt)))
+                build("promote", (store.fleet_aval(cap, sharding=sharding),
+                                  store.fleet_aval(nxt - cap)))
         ev.labels.update(compiled=report.compiled, cached=report.cached)
 
     report.seconds = time.perf_counter() - t0

@@ -412,3 +412,119 @@ def test_from_state_empty_slots_fallback_and_validation():
             st.factor, width=st.width, slots={1: st.slot(1)},
             last_used={1: 0}, init_scale=st.init_scale, ladder=st.ladder,
             widths=st.widths, empty_slots=(0, 1, 3))
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 10: structured fleets through the durability layer
+# ---------------------------------------------------------------------------
+
+
+def _blocklocal_rows(n, block, m, seed, scale=0.25):
+    """m block-local rows: each supported inside one adjacent block pair."""
+    rng = np.random.default_rng(seed)
+    rows = []
+    nb = n // block
+    for _ in range(m):
+        j = int(rng.integers(0, max(nb - 1, 1)))
+        v = np.zeros(n, np.float32)
+        hi = min((j + 2) * block, n)
+        v[j * block:hi] = scale * rng.normal(size=hi - j * block)
+        rows.append(v)
+    return rows
+
+
+def _structured_service(n=16, block=4, B=2, width=3):
+    st = FactorStore(n, capacity=B, width=width, panel=4, interpret=True,
+                     structure="blocktridiag", block=block)
+    return StreamService(st, window=6, auto_flush=False)
+
+
+def test_kill_and_restart_structured_fleet_bitwise(tmp_path):
+    """ISSUE 10 acceptance: a blocktridiag fleet round-trips
+    checkpoint_service -> restore_service(warm=True) BITWISE (the block
+    stacks are raw-byte checkpointed, no dense transit), and the survivor
+    stays in lockstep through the next flush."""
+    import jax
+
+    n, block, B, width = 16, 4, 2, 3
+    svc = _structured_service(n=n, block=block, B=B, width=width)
+    for u in range(B):
+        svc.admit(u)
+    for v in _blocklocal_rows(n, block, width, seed=1):
+        for u in range(B):
+            svc.push(u, v)
+    svc.flush()
+    # Crash mid-buffer: unflushed rows live only in the seeded WAL.
+    for v in _blocklocal_rows(n, block, 2, seed=2):
+        svc.push(0, v)
+    checkpoint_service(svc, tmp_path, step=1)
+
+    meta = ckpt.read_meta(tmp_path, 1)["extra"]["stream"]
+    assert meta["structure"] == "blocktridiag" and meta["block"] == block
+
+    survivor = restore_service(tmp_path, warm=True)
+    assert survivor.store.structure == "blocktridiag"
+    assert survivor.store.block == block
+    for a, b in zip(jax.tree_util.tree_leaves(svc.store.factor.data),
+                    jax.tree_util.tree_leaves(survivor.store.factor.data)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert survivor.pending(0) == svc.pending(0)
+
+    # Lockstep: the replayed buffers absorb to the same factor.
+    r1, r2 = svc.flush(force=True), survivor.flush(force=True)
+    assert r1.absorbed == r2.absorbed
+    np.testing.assert_allclose(
+        np.asarray(survivor.store.factor.data.diag, np.float32),
+        np.asarray(svc.store.factor.data.diag, np.float32), atol=1e-6)
+
+
+def test_structured_checkpoint_fails_loudly_for_dense_reader(tmp_path):
+    """A structured checkpoint must never be reinterpreted as a dense
+    fleet: a dense-template reader fails on leaf names, and an unknown
+    structure kind in the meta is refused by name."""
+    import json
+    from pathlib import Path
+
+    svc = _structured_service()
+    svc.admit("u")
+    checkpoint_service(svc, tmp_path, step=1)
+
+    # Dense-only reader (the pre-ISSUE-10 template): loud leaf mismatch.
+    cap, n = svc.store.capacity, svc.store.n
+    with pytest.raises(ValueError, match="missing leaves"):
+        ckpt.restore(tmp_path, 1, {"fleet": np.zeros((cap, n, n),
+                                                     np.float32)})
+
+    # Unknown structure kind recorded in meta: refused by name.
+    mp = Path(tmp_path) / "step_00000001" / "tree.json"
+    m = json.loads(mp.read_text())
+    m["extra"]["stream"]["structure"] = "banded"
+    mp.write_text(json.dumps(m))
+    with pytest.raises(ValueError, match="banded"):
+        restore_service(tmp_path)
+
+
+def test_pre_structure_checkpoint_restores_dense_unchanged(tmp_path):
+    """Compat default: checkpoints written before the storage-kind record
+    (no 'structure'/'block' keys) restore as dense fleets, bit-for-bit."""
+    import json
+    from pathlib import Path
+
+    svc = _service(n=8, B=2, width=2)
+    svc.admit("u")
+    for v in _rows(8, 2, seed=5):
+        svc.push("u", v)
+    svc.flush()
+    checkpoint_service(svc, tmp_path, step=1)
+
+    mp = Path(tmp_path) / "step_00000001" / "tree.json"
+    m = json.loads(mp.read_text())
+    del m["extra"]["stream"]["structure"]
+    del m["extra"]["stream"]["block"]
+    mp.write_text(json.dumps(m))
+
+    survivor = restore_service(tmp_path)
+    assert survivor.store.structure == "dense"
+    np.testing.assert_array_equal(
+        np.asarray(survivor.store.factor.data),
+        np.asarray(svc.store.factor.data))

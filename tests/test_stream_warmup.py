@@ -507,3 +507,110 @@ def test_checkpoint_waits_for_inflight_background_flush(tmp_path):
         np.asarray(survivor.store.factor.data, np.float32),
         np.asarray(svc.store.factor.data, np.float32), atol=1e-6)
     survivor.stop_background()
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 10: structured fleets stay trace-free through the same ladder
+# ---------------------------------------------------------------------------
+
+
+def _blocklocal(n, block, m, seed, scale=0.2):
+    rng = np.random.default_rng(seed)
+    out = []
+    nb = n // block
+    for _ in range(m):
+        j = int(rng.integers(0, max(nb - 1, 1)))
+        v = np.zeros(n, np.float32)
+        hi = min((j + 2) * block, n)
+        v[j * block:hi] = scale * rng.normal(size=hi - j * block)
+        out.append(v)
+    return out
+
+
+def test_acceptance_trace_free_two_rung_structured_sequence(tmp_path):
+    """ISSUE 10 acceptance: the SAME two-rung admit/flush/evict/readmit/
+    checkpoint/restore/flush sequence, on a blocktridiag fleet — zero
+    step traces after warmup() (the structured avals are AOT-compiled),
+    and the warm restore reproduces the block stacks bitwise."""
+    n, block, width = 16, 4, 3
+    st = FactorStore(n, capacity=2, ladder=(2, 4), width=width, panel=4,
+                     interpret=True, structure="blocktridiag", block=block)
+    svc = StreamService(st, auto_flush=False)
+    warmup_store(st)
+
+    rows = {u: _blocklocal(n, block, width, seed=60 + i)
+            for i, u in enumerate("abcd")}
+    with assert_no_retrace("two-rung structured serving") as w:
+        svc.admit("a")
+        svc.admit("b")
+        for u in ("a", "b"):
+            for v in rows[u]:
+                svc.push(u, v)
+        svc.flush(force=True)
+        svc.evict("b")
+        svc.admit("c")                       # readmit into the freed slot
+        svc.admit("d")                       # ladder boundary: 2 -> 4
+        assert st.capacity == 4
+        for u in ("c", "d"):
+            for v in rows[u]:
+                svc.push(u, v)
+        svc.push("a", (0.5 * rows["a"][0]).astype(np.float32), sign=-1)
+        svc.flush(force=True)
+        svc.decay(0.9)
+        checkpoint_service(svc, tmp_path, step=1)
+        svc.push("c", rows["c"][0])          # WAL-only traffic
+        survivor = restore_service(tmp_path, warm=True)
+        r1 = svc.flush(force=True)
+        r2 = survivor.flush(force=True)
+    assert w.traces == 0
+    assert r1.absorbed == r2.absorbed == {"c": 1}
+    assert survivor.store.structure == "blocktridiag"
+    for a, b in zip(jax.tree_util.tree_leaves(svc.store.factor.data),
+                    jax.tree_util.tree_leaves(survivor.store.factor.data)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-6)
+
+
+def test_evict_readmit_recycled_slot_is_fresh_structured():
+    """The structured twin of the dense slot-recycling test: a recycled
+    slot's block stacks return exactly to sqrt(init_scale) * I (identity
+    diag blocks, zero off blocks) — never a stale member."""
+    n, block = 8, 4
+    st = FactorStore(n, capacity=2, width=2, panel=4, interpret=True,
+                     structure="blocktridiag", block=block, init_scale=2.0)
+    svc = StreamService(st, auto_flush=False)
+    svc.admit("u1")
+    for v in _blocklocal(n, block, 2, seed=70, scale=0.3):
+        svc.push("u1", v)
+    svc.flush(force=True)
+    s1 = st.slot("u1")
+    svc.evict("u1")
+    svc.admit("u2")
+    assert st.slot("u2") == s1
+    member = st.factor_for("u2").data
+    np.testing.assert_allclose(
+        np.asarray(member.diag, np.float32),
+        np.broadcast_to(np.sqrt(2.0) * np.eye(block, dtype=np.float32),
+                        (n // block, block, block)), atol=1e-6)
+    np.testing.assert_array_equal(
+        np.asarray(member.off, np.float32),
+        np.zeros((n // block - 1, block, block), np.float32))
+
+
+def test_structured_contract_violation_fails_at_push():
+    """A row spanning non-adjacent blocks raises at push() time — the
+    coalescer is keyed to the fleet's block size — and leaves the ring
+    untouched (no poisoned row waiting to fail inside the kernel)."""
+    st = FactorStore(8, capacity=2, width=2, panel=4, interpret=True,
+                     structure="blocktridiag", block=2)
+    svc = StreamService(st, auto_flush=False)
+    svc.admit("u")
+    bad = np.zeros(8, np.float32)
+    bad[0] = bad[7] = 1.0                    # blocks 0 and 3: not adjacent
+    with pytest.raises(ValueError, match="block rows 0..3"):
+        svc.push("u", bad)
+    assert svc.pending("u") == 0
+    ok = np.zeros(8, np.float32)
+    ok[2:6] = 1.0                            # pair {1, 2}: block-local
+    svc.push("u", ok)
+    assert svc.pending("u") == 1
